@@ -1,0 +1,24 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+from repro.core import AnalyticEstimator, Testbed
+from repro.configs.edge_models import EDGE_MODELS
+
+EST = AnalyticEstimator()
+
+
+def time_call(fn: Callable, repeats: int = 3) -> Tuple[float, object]:
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out   # us
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,44 @@
+"""Engine-measured communication vs the paper's qualitative claims: OutC
+gathers the whole map (Fig. 1c); NT fusion trades compute for comm (§2.3)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import Testbed, chain
+from repro.core.dpp import plan_search
+from repro.core.partition import Scheme
+from repro.core.plan import fixed_plan
+from repro.configs.edge_models import mobilenet_v1
+from repro.runtime.engine import (init_weights, run_partitioned,
+                                  run_reference)
+
+from .common import EST, emit, time_call
+
+
+def run() -> None:
+    g_full = mobilenet_v1(width=56)
+    g = chain("mb56_prefix", g_full.layers[:9])
+    key = jax.random.PRNGKey(0)
+    ws = init_weights(g, key)
+    x = jax.random.normal(key, (56, 56, 3))
+    ref = run_reference(g, ws, x)
+
+    plans = {
+        "inh": fixed_plan(g, Scheme.INH),
+        "outc": fixed_plan(g, Scheme.OUTC),
+        "grid2d": fixed_plan(g, Scheme.GRID2D),
+        "flexpie": plan_search(g, EST, Testbed(nodes=4,
+                                               bandwidth_gbps=0.5)).plan,
+    }
+    import jax.numpy as jnp
+    for name, plan in plans.items():
+        us, (out, stats) = time_call(
+            lambda plan=plan: run_partitioned(g, ws, x, plan, 4), repeats=1)
+        exact = float(jnp.max(jnp.abs(out - ref))) < 1e-4
+        emit(f"engine/{name}", us,
+             f"recv_KB={stats.bytes_received / 1e3:.1f};"
+             f"sync_points={stats.sync_points};exact={exact}")
+
+
+if __name__ == "__main__":
+    run()

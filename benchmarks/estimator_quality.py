@@ -1,0 +1,41 @@
+"""CE quality — GBDT i-/s-Estimator held-out accuracy and the end-to-end
+plan-quality gap of data-driven FCO vs the analytic oracle (§3.2)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import AnalyticEstimator, Testbed
+from repro.core.dpp import plan_search
+from repro.core.plan import plan_cost
+from repro.configs.edge_models import mobilenet_v1
+from repro.sim import TraceConfig, generate_i_traces, train_estimators
+
+from .common import emit, time_call
+
+
+def run(n_samples: int = 12_000, trees: int = 60) -> None:
+    cfg = TraceConfig(n_samples=n_samples, seed=0)
+    us, est = time_call(lambda: train_estimators(
+        cfg, gbdt_kwargs=dict(n_estimators=trees, max_depth=7)), repeats=1)
+
+    held = TraceConfig(n_samples=2000, seed=99)
+    xi, yi = generate_i_traces(held)
+    rel = np.exp(np.abs(est.i_model.predict(xi) - yi)) - 1
+    emit("ce/i-estimator", us,
+         f"samples={n_samples};trees={trees};"
+         f"median_rel_err={np.median(rel) * 100:.1f}%;"
+         f"p90_rel_err={np.percentile(rel, 90) * 100:.1f}%")
+
+    g = mobilenet_v1()
+    tb = Testbed(nodes=4, bandwidth_gbps=1.0)
+    us2, plan = time_call(lambda: plan_search(g, est, tb).plan, repeats=1)
+    true_cost = plan_cost(g, plan, AnalyticEstimator(), tb)
+    opt = plan_search(g, AnalyticEstimator(), tb).cost
+    emit("ce/plan-gap", us2,
+         f"gbdt_plan_true_cost={true_cost * 1e3:.2f}ms;"
+         f"oracle_optimal={opt * 1e3:.2f}ms;"
+         f"gap={(true_cost / opt - 1) * 100:.1f}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Fig. 2 — micro-bench: per-layer optimal scheme varies with layer and
+testbed (MobileNet L2/L5/L13, 4-node vs 3-node)."""
+from __future__ import annotations
+
+from repro.core import Testbed
+from repro.core.cost import compute_time_s, sync_time_s
+from repro.core.partition import ALL_SCHEMES
+from repro.configs.edge_models import mobilenet_v1
+
+from .common import emit, time_call
+
+LAYERS = {"L2": 2, "L5": 5, "L13": 13}
+
+
+def run() -> None:
+    g = mobilenet_v1()
+    for nodes in (4, 3):
+        tb = Testbed(nodes=nodes, bandwidth_gbps=5.0)
+        for lname, li in LAYERS.items():
+            layer = g.layers[li]
+            nxt = g.layers[li + 1] if li + 1 < len(g) else None
+            times = {}
+            for s in ALL_SCHEMES:
+                us, t = time_call(lambda s=s: (
+                    compute_time_s(layer, s, tb)
+                    + sync_time_s(layer, nxt, s, s, tb)))
+                times[s.name] = t
+            best = min(times, key=times.get)
+            derived = ";".join(f"{k}={v * 1e3:.3f}ms"
+                               for k, v in times.items())
+            emit(f"fig2/{nodes}n-{lname}", us, f"best={best};{derived}")
+
+
+if __name__ == "__main__":
+    run()

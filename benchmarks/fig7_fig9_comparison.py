@@ -1,0 +1,29 @@
+"""Fig. 7 / Fig. 9 — solution comparison on the 4-node and 3-node testbeds:
+4 models x 6 solutions (3 fixed, layerwise, fused, FlexPie), estimated
+inference time + FlexPie speedup over each baseline."""
+from __future__ import annotations
+
+from repro.core import Testbed
+from repro.core.baselines import all_solutions
+from repro.configs.edge_models import EDGE_MODELS
+
+from .common import EST, emit, time_call
+
+
+def run(nodes: int, fig: str, bandwidth: float = 1.0) -> None:
+    tb = Testbed(nodes=nodes, bandwidth_gbps=bandwidth)
+    for model, fn in EDGE_MODELS.items():
+        g = fn()
+        us, sols = time_call(lambda: all_solutions(g, EST, tb), repeats=1)
+        times = {k: v[1] for k, v in sols.items()}
+        flex = times["flexpie"]
+        speedups = {k: times[k] / flex for k in times if k != "flexpie"}
+        derived = ";".join(f"{k}={v * 1e3:.2f}ms" for k, v in times.items())
+        derived += ";" + ";".join(f"x_{k}={v:.2f}"
+                                  for k, v in speedups.items())
+        emit(f"{fig}/{model}-{nodes}node", us, derived)
+
+
+if __name__ == "__main__":
+    run(4, "fig7")
+    run(3, "fig9")

@@ -1,0 +1,35 @@
+"""Fig. 8 — performance score (min_t / t_i) per solution, aggregated over
+models, node counts and bandwidths."""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from repro.core import Testbed
+from repro.core.baselines import all_solutions, performance_scores
+from repro.configs.edge_models import EDGE_MODELS
+
+from .common import EST, emit, time_call
+
+
+def run() -> None:
+    agg = defaultdict(list)
+    us_total = 0.0
+    for nodes in (4, 3):
+        for bw in (5.0, 1.0, 0.5):
+            tb = Testbed(nodes=nodes, bandwidth_gbps=bw)
+            for model, fn in EDGE_MODELS.items():
+                us, sols = time_call(
+                    lambda: all_solutions(fn(), EST, tb), repeats=1)
+                us_total += us
+                scores = performance_scores(
+                    {k: v[1] for k, v in sols.items()})
+                for k, v in scores.items():
+                    agg[k].append(v)
+    for k, vals in sorted(agg.items()):
+        emit(f"fig8/{k}", us_total / max(len(agg), 1),
+             f"mean_score={sum(vals) / len(vals):.3f};"
+             f"min={min(vals):.3f};n={len(vals)}")
+
+
+if __name__ == "__main__":
+    run()

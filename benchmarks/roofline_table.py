@@ -1,0 +1,44 @@
+"""Deliverable (g) — roofline table over all (arch x shape) dry-run records
+(single-pod mesh).  Reads experiments/dryrun/*.json produced by
+``python -m repro.launch.dryrun --all``."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def rows(mesh: str = "16x16"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") == mesh:
+            out.append(rec)
+    return out
+
+
+def run() -> None:
+    recs = rows()
+    if not recs:
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all` first")
+        return
+    for rec in recs:
+        coll = sum(rec.get("coll_bytes", {}).values())
+        emit(f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
+             f"bneck={rec['bottleneck']};"
+             f"t_comp={rec['t_compute_s']:.4g}s;"
+             f"t_mem={rec['t_memory_s']:.4g}s;"
+             f"t_coll={rec['t_collective_s']:.4g}s;"
+             f"useful={rec['useful_ratio']:.3f};"
+             f"coll_GB={coll / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    run()

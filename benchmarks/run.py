@@ -1,0 +1,26 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (engine_comm, estimator_quality, fig2_microbench,
+                   fig7_fig9_comparison, fig8_score, roofline_table,
+                   search_time, tpu_ce)
+    print("name,us_per_call,derived")
+    fig2_microbench.run()
+    fig7_fig9_comparison.run(4, "fig7")
+    fig7_fig9_comparison.run(3, "fig9")
+    fig8_score.run()
+    search_time.run()
+    engine_comm.run()
+    # data-driven CE: small trace budget by default (full 330K via
+    # benchmarks.estimator_quality --full)
+    estimator_quality.run(n_samples=8_000, trees=40)
+    roofline_table.run()
+    tpu_ce.run()
+
+
+if __name__ == "__main__":
+    main()

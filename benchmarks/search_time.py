@@ -1,0 +1,42 @@
+"""§4 metric — DPP search time and estimator-call counts per benchmark
+model, plus optimality confirmation vs exhaustive search on a small graph."""
+from __future__ import annotations
+
+import random
+
+from repro.core import Testbed
+from repro.core.dpp import plan_search
+from repro.core.exhaustive import exhaustive_search
+from repro.core.graph import ConvT, LayerSpec, chain
+from repro.configs.edge_models import EDGE_MODELS
+
+from .common import EST, emit, time_call
+
+
+def run() -> None:
+    tb = Testbed(nodes=4, bandwidth_gbps=1.0)
+    for model, fn in EDGE_MODELS.items():
+        g = fn()
+        us, res = time_call(lambda: plan_search(g, EST, tb))
+        emit(f"search/{model}", us,
+             f"layers={len(g)};i_calls={res.stats.i_calls};"
+             f"s_calls={res.stats.s_calls};"
+             f"pruned={res.stats.pruned_threshold + res.stats.pruned_halo}")
+
+    # optimality check vs exhaustive on a 5-layer random graph
+    rng = random.Random(0)
+    layers = []
+    h, c = 28, 32
+    for i in range(5):
+        layers.append(LayerSpec(f"l{i}", ConvT.CONV, h, h, c, c, 3, 1, 1))
+    g = chain("opt5", layers)
+    us_dp, dp = time_call(lambda: plan_search(g, EST, tb))
+    us_ex, ex = time_call(lambda: exhaustive_search(g, EST, tb), repeats=1)
+    emit("search/optimality-5layer", us_dp,
+         f"dp={dp.cost * 1e3:.4f}ms;exhaustive={ex[1] * 1e3:.4f}ms;"
+         f"match={abs(dp.cost - ex[1]) < 1e-12};"
+         f"speedup_vs_exhaustive={us_ex / max(us_dp, 1e-9):.1f}x")
+
+
+if __name__ == "__main__":
+    run()

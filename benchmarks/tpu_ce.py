@@ -1,0 +1,78 @@
+"""Data-driven TPU cost estimator — the paper's CE idea on dry-run data.
+
+The edge-side CE learns from measured traces; here the "measurements" are
+the loop-aware profiler outputs of every compiled dry-run record.  A GBDT
+regressor maps (architecture dims, shape mode, strategy flags) ->
+log(total roofline time); leave-one-out error shows how well a learned CE
+would generalize across the pool — the TPU analogue of §3.2.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.gbdt import GBDTRegressor
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+_MODE = {"train": 0.0, "prefill": 1.0, "decode": 2.0}
+
+
+def _features(rec: dict):
+    cfg = get_config(rec["arch"])
+    st = rec.get("strategy", {})
+    fam = {"dense": 0, "moe": 1, "ssm": 2, "hybrid": 3, "encdec": 4,
+           "vlm": 5}[cfg.family]
+    return [
+        float(cfg.n_layers), float(cfg.d_model), float(cfg.n_heads),
+        float(cfg.n_kv), float(cfg.d_ff), float(cfg.vocab), float(fam),
+        float(cfg.moe.n_experts if cfg.moe else 0),
+        float(rec["seq"]), float(rec["batch"]), _MODE[rec["mode"]],
+        1.0 if st.get("attn") == "tp" else 0.0,
+        1.0 if st.get("fsdp") else 0.0,
+    ]
+
+
+def load_dataset():
+    xs, ys, names = [], [], []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        rec = json.load(open(p))
+        if rec.get("mesh") != "16x16":
+            continue
+        t = rec["t_compute_s"] + rec["t_memory_s"] + rec["t_collective_s"]
+        xs.append(_features(rec))
+        ys.append(np.log(max(t, 1e-9)))
+        names.append(f"{rec['arch']}/{rec['shape']}")
+    return np.asarray(xs), np.asarray(ys), names
+
+
+def run() -> None:
+    xs, ys, names = load_dataset()
+    if len(xs) < 10:
+        emit("tpu_ce/missing", 0.0, "need dry-run records first")
+        return
+    # leave-one-out over the (small) pool
+    errs = []
+    for i in range(len(xs)):
+        m = np.ones(len(xs), bool)
+        m[i] = False
+        g = GBDTRegressor(n_estimators=60, max_depth=3, learning_rate=0.2,
+                          subsample=1.0).fit(xs[m], ys[m])
+        pred = g.predict(xs[i:i + 1])[0]
+        errs.append(abs(pred - ys[i]))
+    errs = np.asarray(errs)
+    emit("tpu_ce/loo", 0.0,
+         f"records={len(xs)};median_logerr={np.median(errs):.2f}"
+         f"(x{np.exp(np.median(errs)):.2f});"
+         f"p90=x{np.exp(np.percentile(errs, 90)):.2f}")
+
+
+if __name__ == "__main__":
+    run()

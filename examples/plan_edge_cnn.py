@@ -1,0 +1,55 @@
+"""Data-driven FCO, exactly as the paper runs it: collect traces from the
+(simulated) testbed, train the GBDT i-/s-Estimators, plan with DPP, and
+compare the data-driven plan against the oracle optimum across bandwidths
+and topologies.
+
+Run:  PYTHONPATH=src python examples/plan_edge_cnn.py [--samples 20000]
+"""
+import argparse
+import sys
+import time
+
+from repro.core import AnalyticEstimator, Testbed, Topology
+from repro.core.dpp import plan_search
+from repro.core.partition import Mode
+from repro.core.plan import plan_cost
+from repro.configs.edge_models import EDGE_MODELS
+from repro.sim import TraceConfig, train_estimators
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=20_000,
+                    help="traces per estimator (paper: 330K)")
+    ap.add_argument("--trees", type=int, default=60)
+    args = ap.parse_args()
+
+    print(f"collecting {args.samples} traces and training the estimators...")
+    t0 = time.time()
+    est = train_estimators(TraceConfig(n_samples=args.samples),
+                           gbdt_kwargs=dict(n_estimators=args.trees,
+                                            max_depth=7))
+    print(f"  trained in {time.time() - t0:.1f}s")
+
+    oracle = AnalyticEstimator()
+    worst = 0.0
+    for model, fn in EDGE_MODELS.items():
+        g = fn()
+        for bw in (5.0, 1.0, 0.5):
+            for topo in (Topology.RING, Topology.PS):
+                tb = Testbed(nodes=4, bandwidth_gbps=bw, topology=topo)
+                plan = plan_search(g, est, tb).plan
+                nt = sum(1 for _, m in plan.steps if m == Mode.NT)
+                true_cost = plan_cost(g, plan, oracle, tb)
+                opt = plan_search(g, oracle, tb).cost
+                gap = true_cost / opt - 1
+                worst = max(worst, gap)
+                print(f"  {model:10s} bw={bw:3.1f} {topo.name:4s} "
+                      f"NT={nt:2d}  data-driven={true_cost * 1e3:7.2f}ms "
+                      f"oracle-opt={opt * 1e3:7.2f}ms gap={gap * 100:5.1f}%")
+    print(f"worst gap: {worst * 100:.1f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

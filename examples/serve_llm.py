@@ -1,0 +1,82 @@
+"""Serve a small model with batched requests: prefill + KV-cache decode.
+
+Demonstrates the serving path every decode-shape dry-run lowers: batched
+prompts, teacher-free autoregressive generation with per-layer cache pages,
+greedy sampling.
+
+Run:  PYTHONPATH=src python examples/serve_llm.py --arch llama3-8b
+      (reduced config; any of the 10 assigned archs works)
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models.transformer import Model
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_config(args.arch).reduced(),
+                              dtype="float32")
+    if cfg.family == "vlm":
+        cfg = dataclasses.replace(cfg, vision_tokens=0)
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+
+    B, P = args.batch, args.prompt_len
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab)
+    cap = cfg.attn_window or (P + args.gen)
+    cache = model.cache_init(B, capacity=cap)
+    extra = {}
+    if cfg.family == "encdec":
+        audio = jax.random.normal(key, (B, cfg.enc_seq, cfg.d_model)) * 0.02
+        cache["xlayers"] = model.encode_cross(params, audio)
+    if cfg.family == "vlm":
+        extra["vision_embeds"] = jnp.zeros((B, 0, cfg.d_model))
+
+    step = jax.jit(model.decode_step)
+
+    # prefill via decode steps (single-token engine; a production server
+    # would run the fused prefill kernel and hand the cache over)
+    t0 = time.time()
+    for t in range(P):
+        logits, cache = step(params, cache, prompts[:, t:t + 1],
+                             jnp.int32(t))
+    t_prefill = time.time() - t0
+
+    generated = []
+    tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True)
+    t0 = time.time()
+    for i in range(args.gen):
+        generated.append(tok)
+        logits, cache = step(params, cache, tok, jnp.int32(P + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = jnp.concatenate(generated, axis=1)
+    print(f"arch={cfg.name} batch={B} prompt={P} gen={args.gen}")
+    print(f"prefill: {t_prefill * 1e3:.1f} ms   "
+          f"decode: {t_decode * 1e3 / args.gen:.1f} ms/token")
+    for b in range(min(B, 2)):
+        print(f"  req{b}: {list(map(int, prompts[b, :6]))}... -> "
+              f"{list(map(int, gen[b, :10]))}...")
+    assert bool(jnp.isfinite(logits).all())
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

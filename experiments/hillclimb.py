@@ -1,0 +1,108 @@
+"""Perf hillclimbing driver (§Perf of EXPERIMENTS.md).
+
+Three chosen pairs from the 40-pair baseline roofline table:
+
+  A. rwkv6-3b   x train_4k — WORST roofline fraction (useful 0.069,
+     t_memory 3050s): per-token state IO of the recurrent scan.
+     Iterations: chunk-parallel linear attention (chunk 32/64/128).
+  B. granite-moe x train_4k — MOST collective-bound (t_coll/t_mem ~ 2).
+     Iterations: MoE EP vs TP sharding, attn scheme, no-fsdp.
+  C. deepseek-v2 x train_4k — most REPRESENTATIVE of the paper's
+     technique (per-class scheme choice: MoE EP/TP x attn SP/TP).
+
+Bonus D: qwen2-72b decode_32k (memory-bound decode): resident-TP weights
+vs ZeRO-style gathered weights.
+
+Each iteration = explicit FCO decision variables (Strategy / chunk
+schedule), recompiled, re-measured with the loop-aware HLO profiler.
+
+Run: PYTHONPATH=src python experiments/hillclimb.py [A|B|C|D|all]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+import json
+import sys
+
+from repro.launch.dryrun import run_one
+from repro.runtime.shard_plan import Strategy
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "hillclimb")
+
+
+def _chunk(n):
+    def tf(cfg):
+        return dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, chunk=n))
+    return tf
+
+
+EXPERIMENTS = {
+    "A": [
+        ("rwkv6-3b", "train_4k", "baseline recurrent scan", None, None),
+        ("rwkv6-3b", "train_4k", "chunked C=32", None, _chunk(32)),
+        ("rwkv6-3b", "train_4k", "chunked C=64", None, _chunk(64)),
+        ("rwkv6-3b", "train_4k", "chunked C=128", None, _chunk(128)),
+        ("zamba2-1.2b", "train_4k", "zamba2 baseline recurrent", None, None),
+        ("zamba2-1.2b", "train_4k", "zamba2 chunked C=64", None, _chunk(64)),
+    ],
+    "B": [
+        ("granite-moe-3b-a800m", "train_4k", "baseline planner", None, None),
+        ("granite-moe-3b-a800m", "train_4k", "moe=tp attn=tp",
+         Strategy(attn="tp", ffn="tp", moe="tp"), None),
+        ("granite-moe-3b-a800m", "train_4k", "moe=tp attn=sp",
+         Strategy(attn="sp", ffn="sp", moe="tp"), None),
+        ("granite-moe-3b-a800m", "train_4k", "no-fsdp (replicated weights)",
+         Strategy(attn="tp", ffn="tp", moe="tp", fsdp=False), None),
+    ],
+    "C": [
+        ("deepseek-v2-236b", "train_4k", "baseline planner", None, None),
+        ("deepseek-v2-236b", "train_4k", "moe=tp attn=sp",
+         Strategy(attn="sp", ffn="tp", moe="tp"), None),
+        ("deepseek-v2-236b", "train_4k", "moe=ep attn=tp",
+         Strategy(attn="tp", ffn="tp", moe="ep"), None),
+        ("deepseek-v2-236b", "train_4k", "moe=ep attn=sp",
+         Strategy(attn="sp", ffn="sp", moe="ep"), None),
+    ],
+    "D": [
+        ("qwen2-72b", "decode_32k", "baseline planner", None, None),
+        ("qwen2-72b", "decode_32k", "ZeRO-inference (fsdp gathered)",
+         Strategy(attn="tp", ffn="tp", fsdp=True,
+                  decode_resident=False), None),
+        ("qwen2-72b", "decode_32k", "resident TP weights",
+         Strategy(attn="tp", ffn="tp", fsdp=False,
+                  decode_resident=True), None),
+    ],
+}
+
+
+def run(which: str) -> None:
+    os.makedirs(OUT, exist_ok=True)
+    targets = EXPERIMENTS if which == "all" else {which: EXPERIMENTS[which]}
+    for exp, rows_spec in targets.items():
+        print(f"=== hillclimb {exp} ===", flush=True)
+        rows = []
+        for arch, shape, label, st, tf in rows_spec:
+            try:
+                rec = run_one(arch, shape, strategy=st, cfg_transform=tf,
+                              verbose=False)
+            except Exception as e:  # record failures, keep climbing
+                print(f"  {label:40s} FAILED {type(e).__name__}: "
+                      f"{str(e)[:160]}", flush=True)
+                continue
+            rec["label"] = label
+            rows.append(rec)
+            print(f"  {label:40s} comp={rec['t_compute_s']:9.4g}s "
+                  f"mem={rec['t_memory_s']:9.4g}s "
+                  f"coll={rec['t_collective_s']:9.4g}s "
+                  f"bneck={rec['bottleneck']:10s} "
+                  f"useful={rec['useful_ratio']:.3f} "
+                  f"temp={(rec['mem_per_device']['temp_size_bytes'] or 0) / 1e9:.1f}GB",
+                  flush=True)
+        with open(os.path.join(OUT, f"{exp}.json"), "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "all")

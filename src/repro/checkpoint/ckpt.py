@@ -1,0 +1,52 @@
+"""Minimal pytree checkpointing: flattened key-paths -> one .npz file.
+
+Good enough for single-host examples/tests; a production deployment would
+swap in tensorstore/orbax behind the same two functions.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":   # e.g. bfloat16 (void in numpy)
+            arr = arr.astype(np.float32)
+        flat[_path_str(kp)] = arr
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez_compressed(path, **flat)
+
+
+def load_pytree(template: Any, path: str) -> Any:
+    data = np.load(path)
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, leaf in flat_t:
+        key = _path_str(kp)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        import jax.numpy as jnp
+        leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+    return treedef.unflatten(leaves)

@@ -1,0 +1,119 @@
+"""The paper's four benchmark models (§4) as planner layer graphs.
+
+MobileNet v1 (224x224), ResNet-18 / ResNet-101 (224x224) and BERT-base
+(seq 128).  Residual adds are folded as ADD layers; BERT blocks are modelled
+as FC/matmul chains (ConvT.FC), which reproduces the paper's observation that
+scheme choice barely matters for matmul-dominated models.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.graph import ConvT, LayerSpec, ModelGraph, chain
+
+
+def _conv(name, h, w, cin, cout, k, s, p, t=ConvT.CONV) -> LayerSpec:
+    return LayerSpec(name, t, h, w, cin, cout, k, s, p)
+
+
+def mobilenet_v1(width: int = 224) -> ModelGraph:
+    layers: List[LayerSpec] = []
+    h = w = width
+
+    def add(l: LayerSpec):
+        layers.append(l)
+        return l.out_h, l.out_w
+
+    h, w = add(_conv("conv0", h, w, 3, 32, 3, 2, 1))
+    cfg = [  # (dw stride, pointwise out channels)
+        (1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
+        (1, 512), (1, 512), (1, 512), (1, 512), (1, 512), (2, 1024), (1, 1024),
+    ]
+    cin = 32
+    for i, (s, cout) in enumerate(cfg):
+        h, w = add(_conv(f"dw{i+1}", h, w, cin, cin, 3, s, 1, ConvT.DWCONV))
+        h, w = add(_conv(f"pw{i+1}", h, w, cin, cout, 1, 1, 0, ConvT.POINTWISE))
+        cin = cout
+    h, w = add(_conv("avgpool", h, w, 1024, 1024, int(h), int(h), 0, ConvT.POOL))
+    layers.append(LayerSpec("fc", ConvT.FC, 1, 1, 1024, 1000))
+    return chain("mobilenet", layers)
+
+
+def _res_block(layers, name, h, w, cin, cout, stride) -> tuple:
+    layers.append(_conv(f"{name}a", h, w, cin, cout, 3, stride, 1))
+    h, w = layers[-1].out_h, layers[-1].out_w
+    layers.append(_conv(f"{name}b", h, w, cout, cout, 3, 1, 1))
+    layers.append(LayerSpec(f"{name}+", ConvT.ADD, h, w, cout, cout))
+    return h, w
+
+
+def _bottleneck(layers, name, h, w, cin, cmid, cout, stride) -> tuple:
+    layers.append(_conv(f"{name}a", h, w, cin, cmid, 1, 1, 0, ConvT.POINTWISE))
+    layers.append(_conv(f"{name}b", h, w, cmid, cmid, 3, stride, 1))
+    h, w = layers[-1].out_h, layers[-1].out_w
+    layers.append(_conv(f"{name}c", h, w, cmid, cout, 1, 1, 0, ConvT.POINTWISE))
+    layers.append(LayerSpec(f"{name}+", ConvT.ADD, h, w, cout, cout))
+    return h, w
+
+
+def resnet18(width: int = 224) -> ModelGraph:
+    layers: List[LayerSpec] = []
+    h = w = width
+    layers.append(_conv("conv1", h, w, 3, 64, 7, 2, 3))
+    h, w = layers[-1].out_h, layers[-1].out_w
+    layers.append(_conv("maxpool", h, w, 64, 64, 3, 2, 1, ConvT.POOL))
+    h, w = layers[-1].out_h, layers[-1].out_w
+    plan = [(64, 1), (64, 1), (128, 2), (128, 1), (256, 2), (256, 1),
+            (512, 2), (512, 1)]
+    cin = 64
+    for i, (cout, s) in enumerate(plan):
+        h, w = _res_block(layers, f"b{i}", h, w, cin, cout, s)
+        cin = cout
+    layers.append(_conv("avgpool", h, w, 512, 512, int(h), int(h), 0, ConvT.POOL))
+    layers.append(LayerSpec("fc", ConvT.FC, 1, 1, 512, 1000))
+    return chain("resnet18", layers)
+
+
+def resnet101(width: int = 224) -> ModelGraph:
+    layers: List[LayerSpec] = []
+    h = w = width
+    layers.append(_conv("conv1", h, w, 3, 64, 7, 2, 3))
+    h, w = layers[-1].out_h, layers[-1].out_w
+    layers.append(_conv("maxpool", h, w, 64, 64, 3, 2, 1, ConvT.POOL))
+    h, w = layers[-1].out_h, layers[-1].out_w
+    stages = [(64, 256, 3, 1), (128, 512, 4, 2), (256, 1024, 23, 2),
+              (512, 2048, 3, 2)]
+    cin = 64
+    for si, (cmid, cout, reps, stride) in enumerate(stages):
+        for r in range(reps):
+            h, w = _bottleneck(layers, f"s{si}r{r}", h, w, cin, cmid, cout,
+                               stride if r == 0 else 1)
+            cin = cout
+    layers.append(_conv("avgpool", h, w, 2048, 2048, int(h), int(h), 0,
+                        ConvT.POOL))
+    layers.append(LayerSpec("fc", ConvT.FC, 1, 1, 2048, 1000))
+    return chain("resnet101", layers)
+
+
+def bert_base(seq: int = 128, d: int = 768, n_layers: int = 12,
+              d_ff: int = 3072) -> ModelGraph:
+    """BERT as a matmul chain: per block QKV proj, attn-out proj (attention
+    score matmuls folded into extra_flop_factor), two FFN matmuls."""
+    layers: List[LayerSpec] = []
+    for i in range(n_layers):
+        layers.append(LayerSpec(f"b{i}.qkv", ConvT.FC, seq, 1, d, 3 * d))
+        # attention matmuls ~ 2*seq*seq*d flops folded into the out-proj
+        attn_extra = 1.0 + (2.0 * seq * seq * d) / (2.0 * seq * 3 * d * d)
+        layers.append(LayerSpec(f"b{i}.attn_out", ConvT.FC, seq, 1, 3 * d, d,
+                                extra_flop_factor=attn_extra))
+        layers.append(LayerSpec(f"b{i}.ffn_up", ConvT.FC, seq, 1, d, d_ff))
+        layers.append(LayerSpec(f"b{i}.ffn_down", ConvT.FC, seq, 1, d_ff, d))
+    return chain("bert", layers)
+
+
+EDGE_MODELS = {
+    "mobilenet": mobilenet_v1,
+    "resnet18": resnet18,
+    "resnet101": resnet101,
+    "bert": bert_base,
+}

@@ -1,0 +1,17 @@
+"""FlexPie core: flexible combinatorial optimization for model partition."""
+from .graph import ConvT, LayerSpec, ModelGraph, chain, halo_growth
+from .partition import ALL_SCHEMES, Mode, Scheme
+from .cost import Testbed, Topology
+from .estimator import AnalyticEstimator, GBDTEstimator
+from .plan import Plan, fixed_plan, plan_cost, plan_feasible
+from .dpp import SearchResult, plan_search
+from .exhaustive import exhaustive_search
+from . import baselines
+
+__all__ = [
+    "ConvT", "LayerSpec", "ModelGraph", "chain", "halo_growth",
+    "ALL_SCHEMES", "Mode", "Scheme", "Testbed", "Topology",
+    "AnalyticEstimator", "GBDTEstimator", "Plan", "fixed_plan", "plan_cost",
+    "plan_feasible", "SearchResult", "plan_search", "exhaustive_search",
+    "baselines",
+]

@@ -1,0 +1,93 @@
+"""Analytic cost model — the simulated testbed "physics".
+
+On real hardware these times would be measured; here (no SRIO DSP cluster)
+the analytic model is both (a) the ground truth the trace generator samples
+from when training the GBDT estimators and (b) the oracle the Theorem-1
+property tests compare DPP against.  The model captures the effects the paper
+measures: straggler imbalance, scheme-dependent efficiency, per-message
+latency, topology (ring / PS / mesh) and bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+from .graph import ConvT, LayerSpec
+from .partition import (Mode, Scheme, boundary_bytes_same_scheme,
+                        relayout_bytes, shard_work)
+
+
+class Topology(enum.IntEnum):
+    RING = 0
+    PS = 1     # parameter-server (star)
+    MESH = 2   # full bisection, direct point-to-point
+
+
+@dataclasses.dataclass(frozen=True)
+class Testbed:
+    """Edge cluster description (Fig. 4 features 11-12 + node count)."""
+
+    nodes: int = 4
+    bandwidth_gbps: float = 5.0          # per-link, SRIO in the paper
+    topology: Topology = Topology.RING
+    device_gflops: float = 16.0          # TMS320C6678 ~16 GFLOP/s fp32
+    link_latency_us: float = 10.0        # per message
+    # scheme-dependent kernel efficiency: contiguous row splits vectorize
+    # better on the DSP than column or channel splits.
+    eff_inh: float = 0.90
+    eff_inw: float = 0.80
+    eff_outc: float = 0.85
+    eff_grid: float = 0.82
+
+    def efficiency(self, scheme: Scheme) -> float:
+        return {Scheme.INH: self.eff_inh, Scheme.INW: self.eff_inw,
+                Scheme.OUTC: self.eff_outc, Scheme.GRID2D: self.eff_grid}[scheme]
+
+    def topo_factor(self) -> float:
+        """Multiplier on bytes-on-busiest-link."""
+        return {Topology.RING: 1.0, Topology.PS: 2.0, Topology.MESH: 0.7}[
+            self.topology]
+
+    def comm_time_s(self, bytes_busiest: float, n_messages: int = 2) -> float:
+        if bytes_busiest <= 0.0:
+            return 0.0
+        bw = self.bandwidth_gbps * 1e9 / 8.0  # bytes/s
+        return (bytes_busiest * self.topo_factor() / bw
+                + n_messages * self.link_latency_us * 1e-6)
+
+
+def compute_time_s(layer: LayerSpec, scheme: Scheme, tb: Testbed,
+                   extra_halo: int = 0) -> float:
+    """i-Estimator ground truth: straggler compute time of one layer."""
+    work = shard_work(layer, scheme, tb.nodes, extra_halo=extra_halo)
+    eff = tb.efficiency(scheme)
+    # depthwise conv sustains lower utilization (low arithmetic intensity)
+    if layer.conv_t == ConvT.DWCONV:
+        eff *= 0.45
+    elif layer.conv_t == ConvT.POOL:
+        eff *= 0.60
+    elif layer.conv_t == ConvT.ADD:
+        eff *= 0.30
+    return work.straggler_flops / (tb.device_gflops * 1e9 * eff)
+
+
+def sync_time_s(layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
+                dst: Optional[Scheme], tb: Testbed) -> float:
+    """s-Estimator ground truth: time to make ``layer``'s output available in
+    the layout the next layer's scheme requires (T-mode boundary).
+
+    ``nxt=None`` means final layer: outputs are gathered to node 0.
+    """
+    if nxt is None or dst is None:
+        total = layer.out_elems() * 4.0
+        return tb.comm_time_s(total * (tb.nodes - 1) / tb.nodes,
+                              n_messages=tb.nodes - 1)
+    if src == dst and src.spatial:
+        b = boundary_bytes_same_scheme(layer, nxt, src, tb.nodes)
+        return tb.comm_time_s(b, n_messages=2 if b else 0)
+    b = relayout_bytes(layer, src, dst, tb.nodes)
+    halo = 0.0
+    if dst.spatial:
+        halo = boundary_bytes_same_scheme(layer, nxt, dst, tb.nodes)
+    return tb.comm_time_s(b + halo, n_messages=2 * (tb.nodes - 1))

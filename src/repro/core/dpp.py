@@ -1,0 +1,117 @@
+"""Dynamic Partition Planner — Algorithm 1 (§3.3).
+
+Reverse-order DP over T-states.  ``S[i][p]`` is the optimal remaining time
+from layer ``i`` to the end, given layer ``i``'s input is exactly sharded in
+layout ``p``.  NT runs appear only *inside* segments ``[i..b]`` that start and
+end at T boundaries — exactly the paper's Key designs 1-3: an NT-prefixed
+subsequence has indeterminate workload (footnote 3), so such states are never
+evaluated on their own.
+
+Pruning (the paper's "piecing together" list):
+  1. reverse search never expands NT-start states (they exist only inside
+     segment enumeration);
+  2. suffix costs ``S[b+1][p']`` are reused across all segments ending at b;
+  3. dynamic threshold — segment cost is monotone in segment length, so the
+     backtrack stops as soon as the partial segment cost alone exceeds the
+     incumbent (and when the halo swallows the whole shard, at which point
+     redundant compute has degenerated into full replication).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+from .cost import Testbed
+from .estimator import CostEstimator
+from .graph import ModelGraph, halo_growth
+from .partition import ALL_SCHEMES, Mode, Scheme, min_shard_extent
+from .plan import Plan
+
+_INF = float("inf")
+
+
+@dataclasses.dataclass
+class SearchStats:
+    i_calls: int = 0
+    s_calls: int = 0
+    states: int = 0
+    pruned_threshold: int = 0
+    pruned_halo: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    plan: Plan
+    cost: float
+    stats: SearchStats
+
+
+def plan_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
+                schemes: Sequence[Scheme] = ALL_SCHEMES,
+                max_segment: int = 32,
+                allow_fusion: bool = True) -> SearchResult:
+    """Run DPP.  ``allow_fusion=False`` restricts to all-T plans (the
+    layerwise baseline); ``schemes`` restricted to one scheme with fusion on
+    gives the fused-layer baseline."""
+    layers = graph.layers
+    n = len(layers)
+    k = len(schemes)
+    stats = SearchStats()
+
+    S: List[List[float]] = [[_INF] * k for _ in range(n + 1)]
+    # choice[i][pi] = (segment_end_b, next_scheme_index or -1)
+    choice: List[List[Tuple[int, int]]] = [[(-1, -1)] * k for _ in range(n + 1)]
+
+    for i in range(n - 1, -1, -1):
+        for pi, p in enumerate(schemes):
+            best, best_choice = _INF, (-1, -1)
+            stats.states += 1
+            seg_hi = min(i + max_segment, n) if allow_fusion else i + 1
+            for b in range(i, seg_hi):
+                if b > i and not p.spatial:
+                    break  # OutC cannot fuse (NT undefined)
+                halos = halo_growth(layers[i:b + 1], b - i)
+                if b > i and 2 * halos[0] >= min_shard_extent(
+                        layers[i], p, tb.nodes):
+                    stats.pruned_halo += 1
+                    break  # halo degenerated into replication
+                segcost = 0.0
+                for off, m in enumerate(range(i, b + 1)):
+                    segcost += est.i_cost(layers[m], p, tb,
+                                          extra_halo=halos[off] if b > i else 0)
+                    stats.i_calls += 1
+                if segcost >= best:
+                    stats.pruned_threshold += 1
+                    break  # dynamic threshold: monotone in b
+                if b == n - 1:
+                    stats.s_calls += 1
+                    c = segcost + est.s_cost(layers[b], None, p, None, tb)
+                    if c < best:
+                        best, best_choice = c, (b, -1)
+                else:
+                    for qi, q in enumerate(schemes):
+                        if S[b + 1][qi] == _INF:
+                            continue
+                        stats.s_calls += 1
+                        c = (segcost
+                             + est.s_cost(layers[b], layers[b + 1], p, q, tb)
+                             + S[b + 1][qi])
+                        if c < best:
+                            best, best_choice = c, (b, qi)
+            S[i][pi] = best
+            choice[i][pi] = best_choice
+
+    pi = min(range(k), key=lambda j: S[0][j])
+    total = S[0][pi]
+    steps: List[Tuple[Scheme, Mode]] = []
+    i = 0
+    while i < n:
+        b, qi = choice[i][pi]
+        p = schemes[pi]
+        for m in range(i, b + 1):
+            steps.append((p, Mode.NT if m < b else Mode.T))
+        i = b + 1
+        if qi >= 0:
+            pi = qi
+    return SearchResult(plan=Plan(tuple(steps)), cost=total, stats=stats)

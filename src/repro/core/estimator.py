@@ -1,0 +1,101 @@
+"""Cost estimator (CE) interface — i-Estimator and s-Estimator (§3.2).
+
+Two implementations:
+
+* :class:`AnalyticEstimator` — wraps the closed-form testbed model
+  (``core/cost.py``).  Used as the Theorem-1 oracle and as the label source
+  for trace generation.
+* :class:`GBDTEstimator` — the paper-faithful data-driven estimator: two
+  from-scratch histogram GBDT regressors (``repro/gbdt``) trained on traces
+  sampled from the simulator (``repro/sim/trace.py``).  Predicts log-time.
+
+Feature expression (Fig. 4, extended with the planner's decision variables):
+``[InH, InW, InC, OutH, OutW, OutC, K, S, P, ConvT, bandwidth, topology]``
+plus ``nodes, scheme, halo`` for i- and ``nodes, src, dst, next_K`` for s-.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Protocol, Sequence
+
+import numpy as np
+
+from .cost import Testbed, compute_time_s, sync_time_s
+from .graph import LayerSpec
+from .partition import Scheme
+
+
+class CostEstimator(Protocol):
+    def i_cost(self, layer: LayerSpec, scheme: Scheme, tb: Testbed,
+               extra_halo: int = 0) -> float: ...
+
+    def s_cost(self, layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
+               dst: Optional[Scheme], tb: Testbed) -> float: ...
+
+
+class AnalyticEstimator:
+    """Oracle estimator: reads the simulated testbed physics directly."""
+
+    def i_cost(self, layer: LayerSpec, scheme: Scheme, tb: Testbed,
+               extra_halo: int = 0) -> float:
+        return compute_time_s(layer, scheme, tb, extra_halo=extra_halo)
+
+    def s_cost(self, layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
+               dst: Optional[Scheme], tb: Testbed) -> float:
+        return sync_time_s(layer, nxt, src, dst, tb)
+
+
+# ---------------------------------------------------------------------------
+# Feature extraction shared by trace generation and GBDT inference.
+# ---------------------------------------------------------------------------
+
+def i_features(layer: LayerSpec, scheme: Scheme, tb: Testbed,
+               extra_halo: int) -> List[float]:
+    return [*layer.feature_vector(), tb.bandwidth_gbps, float(tb.topology),
+            float(tb.nodes), float(scheme), float(extra_halo)]
+
+
+def s_features(layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
+               dst: Optional[Scheme], tb: Testbed) -> List[float]:
+    return [*layer.feature_vector(), tb.bandwidth_gbps, float(tb.topology),
+            float(tb.nodes), float(src),
+            -1.0 if dst is None else float(dst),
+            0.0 if nxt is None else float(nxt.k)]
+
+
+I_FEATURE_NAMES = ["InH", "InW", "InC", "OutH", "OutW", "OutC", "K", "S", "P",
+                   "ConvT", "BW", "Topo", "Nodes", "Scheme", "Halo"]
+S_FEATURE_NAMES = ["InH", "InW", "InC", "OutH", "OutW", "OutC", "K", "S", "P",
+                   "ConvT", "BW", "Topo", "Nodes", "Src", "Dst", "NextK"]
+
+
+class GBDTEstimator:
+    """Data-driven CE backed by two trained GBDT regressors (log-seconds)."""
+
+    def __init__(self, i_model, s_model):
+        self.i_model = i_model
+        self.s_model = s_model
+        self._i_cache: dict = {}
+        self._s_cache: dict = {}
+
+    def i_cost(self, layer: LayerSpec, scheme: Scheme, tb: Testbed,
+               extra_halo: int = 0) -> float:
+        key = (layer, scheme, tb, extra_halo)
+        hit = self._i_cache.get(key)
+        if hit is None:
+            x = np.asarray([i_features(layer, scheme, tb, extra_halo)],
+                           dtype=np.float64)
+            hit = float(math.exp(self.i_model.predict(x)[0]))
+            self._i_cache[key] = hit
+        return hit
+
+    def s_cost(self, layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
+               dst: Optional[Scheme], tb: Testbed) -> float:
+        key = (layer, None if nxt is None else nxt.k, src, dst, tb)
+        hit = self._s_cache.get(key)
+        if hit is None:
+            x = np.asarray([s_features(layer, nxt, src, dst, tb)],
+                           dtype=np.float64)
+            hit = float(math.exp(self.s_model.predict(x)[0]))
+            self._s_cache[key] = hit
+        return hit

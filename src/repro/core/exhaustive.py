@@ -1,0 +1,59 @@
+"""Brute-force search over the full (scheme, mode) space.
+
+Used only for small graphs: the Theorem-1 property tests compare DPP's result
+against this oracle under the same plan-validity constraints.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Iterator, Optional, Sequence, Tuple
+
+from .cost import Testbed
+from .estimator import CostEstimator
+from .graph import ModelGraph
+from .partition import ALL_SCHEMES, Mode, Scheme
+from .plan import Plan, plan_cost, plan_feasible
+
+
+def enumerate_plans(n: int, schemes: Sequence[Scheme] = ALL_SCHEMES,
+                    allow_fusion: bool = True) -> Iterator[Plan]:
+    """All valid plans: segmentations x per-segment schemes.
+
+    Multi-layer segments must use a single spatial scheme (see plan.py).
+    """
+    mode_opts = (Mode.T, Mode.NT) if allow_fusion else (Mode.T,)
+    for modes in itertools.product(mode_opts, repeat=n - 1):
+        modes = (*modes, Mode.T)
+        # segment boundaries
+        segs, a = [], 0
+        for i, t in enumerate(modes):
+            if t == Mode.T:
+                segs.append((a, i))
+                a = i + 1
+        per_seg_choices = []
+        for (sa, sb) in segs:
+            if sb > sa:
+                per_seg_choices.append([s for s in schemes if s.spatial])
+            else:
+                per_seg_choices.append(list(schemes))
+        for combo in itertools.product(*per_seg_choices):
+            steps: list = [None] * n
+            for (sa, sb), s in zip(segs, combo):
+                for m in range(sa, sb + 1):
+                    steps[m] = (s, modes[m])
+            yield Plan(tuple(steps))
+
+
+def exhaustive_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
+                      schemes: Sequence[Scheme] = ALL_SCHEMES,
+                      allow_fusion: bool = True) -> Tuple[Plan, float]:
+    best: Optional[Plan] = None
+    best_cost = float("inf")
+    for plan in enumerate_plans(len(graph), schemes, allow_fusion):
+        if not plan_feasible(graph, plan, tb.nodes):
+            continue
+        c = plan_cost(graph, plan, est, tb)
+        if c < best_cost:
+            best, best_cost = plan, c
+    assert best is not None
+    return best, best_cost

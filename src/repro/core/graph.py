@@ -1,0 +1,154 @@
+"""Layer-graph IR for the edge-inference planner.
+
+FlexPie consumes a computation graph of DNN layers (Fig. 3).  We model the
+graph as an ordered chain of :class:`LayerSpec` (residual adds are folded into
+``extra_flop_factor`` of the layer that closes the block — the planner only
+needs shapes, FLOPs and receptive fields, not autodiff semantics).  The real
+tensor programs live in ``repro/models`` and ``repro/runtime/engine.py``; this
+IR is what the combinatorial optimizer reasons about.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import List, Optional, Sequence, Tuple
+
+
+class ConvT(enum.IntEnum):
+    """Layer categories (the ``ConvT`` categorical feature of Fig. 4)."""
+
+    CONV = 0          # standard convolution
+    DWCONV = 1        # depthwise convolution
+    POINTWISE = 2     # 1x1 convolution
+    POOL = 3          # max/avg pool (no weights)
+    FC = 4            # fully connected / matmul (BERT, classifier heads)
+    ADD = 5           # residual add (elementwise)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer of the inference graph.
+
+    Shapes follow the paper's feature expression (Fig. 4): input feature map
+    ``InH x InW x InC``, output ``OutH x OutW x OutC``, kernel ``K``, stride
+    ``S``, padding ``P``.  For FC/matmul layers the convention is
+    ``InH = OutH = seq_len`` (BERT tokens), ``InW = OutW = 1``,
+    ``InC/OutC = feature dims`` and ``K = S = 1, P = 0``.
+    """
+
+    name: str
+    conv_t: ConvT
+    in_h: int
+    in_w: int
+    in_c: int
+    out_c: int
+    k: int = 1
+    s: int = 1
+    p: int = 0
+    extra_flop_factor: float = 1.0  # folds residual adds / activations
+
+    @property
+    def out_h(self) -> int:
+        return (self.in_h + 2 * self.p - self.k) // self.s + 1
+
+    @property
+    def out_w(self) -> int:
+        return (self.in_w + 2 * self.p - self.k) // self.s + 1
+
+    # ---- workload ---------------------------------------------------------
+    def flops(self) -> float:
+        """Total MACs*2 for the full (unpartitioned) layer."""
+        oh, ow = self.out_h, self.out_w
+        if self.conv_t == ConvT.CONV or self.conv_t == ConvT.POINTWISE:
+            f = 2.0 * oh * ow * self.out_c * self.in_c * self.k * self.k
+        elif self.conv_t == ConvT.DWCONV:
+            f = 2.0 * oh * ow * self.out_c * self.k * self.k
+        elif self.conv_t == ConvT.POOL:
+            f = 1.0 * oh * ow * self.out_c * self.k * self.k
+        elif self.conv_t == ConvT.FC:
+            f = 2.0 * self.in_h * self.in_c * self.out_c
+        elif self.conv_t == ConvT.ADD:
+            f = 1.0 * oh * ow * self.out_c
+        else:  # pragma: no cover - exhaustive enum
+            raise ValueError(self.conv_t)
+        return f * self.extra_flop_factor
+
+    def out_elems(self) -> int:
+        return self.out_h * self.out_w * self.out_c
+
+    def in_elems(self) -> int:
+        return self.in_h * self.in_w * self.in_c
+
+    def weight_elems(self) -> int:
+        if self.conv_t in (ConvT.CONV, ConvT.POINTWISE):
+            return self.k * self.k * self.in_c * self.out_c
+        if self.conv_t == ConvT.DWCONV:
+            return self.k * self.k * self.out_c
+        if self.conv_t == ConvT.FC:
+            return self.in_c * self.out_c
+        return 0
+
+    def feature_vector(self) -> Tuple[float, ...]:
+        """Shape part of the Fig. 4 feature expression (7 of 12 dims)."""
+        return (
+            float(self.in_h), float(self.in_w), float(self.in_c),
+            float(self.out_h), float(self.out_w), float(self.out_c),
+            float(self.k), float(self.s), float(self.p), float(self.conv_t),
+        )
+
+    def with_input(self, in_h: int, in_w: int) -> "LayerSpec":
+        return dataclasses.replace(self, in_h=in_h, in_w=in_w)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelGraph:
+    """Chain of layers; ``layers[i+1].in_* == layers[i].out_*`` must hold."""
+
+    name: str
+    layers: Tuple[LayerSpec, ...]
+
+    def __post_init__(self) -> None:
+        for a, b in zip(self.layers, self.layers[1:]):
+            if (a.out_h, a.out_w) != (b.in_h, b.in_w) or a.out_c != b.in_c:
+                raise ValueError(
+                    f"{self.name}: layer chain mismatch {a.name} "
+                    f"({a.out_h},{a.out_w},{a.out_c}) -> {b.name} "
+                    f"({b.in_h},{b.in_w},{b.in_c})")
+
+    def __len__(self) -> int:
+        return len(self.layers)
+
+    def total_flops(self) -> float:
+        return sum(l.flops() for l in self.layers)
+
+    def spatial(self) -> bool:
+        """True if the graph has spatial (conv) layers at all."""
+        return any(l.conv_t in (ConvT.CONV, ConvT.DWCONV, ConvT.POINTWISE,
+                                ConvT.POOL) for l in self.layers)
+
+
+# ---------------------------------------------------------------------------
+# Receptive-field math — the heart of NT-mode (redundant-compute) planning.
+# ---------------------------------------------------------------------------
+
+def halo_growth(layers: Sequence[LayerSpec], upto: int) -> List[int]:
+    """Cumulative output-halo each layer must additionally produce so that
+    layer ``upto`` can be computed with zero communication (NT fusion).
+
+    ``halo[m]`` = number of extra *output* rows (per side) layer ``m`` must
+    compute, given layers ``m+1..upto`` are fused after it.  ``halo[upto] = 0``.
+    Standard receptive-field recurrence, applied backwards:
+        need[m] = need[m+1] * S_{m+1} + (K_{m+1} - 1)   (in layer-m output rows)
+    For FC/ADD layers K=S=1 so the halo never grows through them.
+    """
+    n = upto + 1
+    halo = [0] * n
+    for m in range(upto - 1, -1, -1):
+        nxt = layers[m + 1]
+        halo[m] = halo[m + 1] * nxt.s + (nxt.k - 1)
+    return halo
+
+
+def chain(name: str, specs: Sequence[LayerSpec]) -> ModelGraph:
+    return ModelGraph(name=name, layers=tuple(specs))

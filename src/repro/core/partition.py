@@ -1,0 +1,201 @@
+"""Partition-scheme geometry: shard sizes, halos, balance, comm volumes.
+
+Implements the four schemes of Fig. 1 — One-dim InH / InW / OutC and 2D-grid —
+plus the T/NT boundary semantics of §2.3.  Everything here is exact integer
+geometry (no estimation); the cost model in ``cost.py`` turns these byte/FLOP
+counts into times for a given testbed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import List, Sequence, Tuple
+
+from .graph import ConvT, LayerSpec
+
+
+class Scheme(enum.IntEnum):
+    INH = 0      # split input/output feature-map height
+    INW = 1      # split width
+    OUTC = 2     # split output channels
+    GRID2D = 3   # split height x width grid
+
+    @property
+    def spatial(self) -> bool:
+        return self in (Scheme.INH, Scheme.INW, Scheme.GRID2D)
+
+
+class Mode(enum.IntEnum):
+    T = 0    # transmit boundary/re-layout data after this layer
+    NT = 1   # no transmission; fuse via redundant halo compute
+
+
+ALL_SCHEMES: Tuple[Scheme, ...] = (Scheme.INH, Scheme.INW, Scheme.OUTC,
+                                   Scheme.GRID2D)
+
+
+def split_sizes(total: int, parts: int) -> List[int]:
+    """Balanced 1-D split (ceil for the first ``total % parts`` shards)."""
+    q, r = divmod(total, parts)
+    return [q + (1 if i < r else 0) for i in range(parts)]
+
+
+def grid_dims(nodes: int) -> Tuple[int, int]:
+    """2D-grid cell layout.  4 nodes -> 2x2.  Non-square node counts get a
+    ceil(sqrt) grid whose cells are assigned round-robin, reproducing the
+    paper's observation that 3 nodes leave one node with 2x the work."""
+    gh = int(math.ceil(math.sqrt(nodes)))
+    gw = int(math.ceil(nodes / gh))
+    return gh, gw
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardWork:
+    """Per-node workload of one layer under one scheme."""
+
+    flops_per_node: Tuple[float, ...]   # straggler = max(...)
+    out_bytes_per_node: Tuple[float, ...]
+
+    @property
+    def straggler_flops(self) -> float:
+        return max(self.flops_per_node)
+
+    @property
+    def imbalance(self) -> float:
+        mx = max(self.flops_per_node)
+        avg = sum(self.flops_per_node) / len(self.flops_per_node)
+        return mx / max(avg, 1.0)
+
+
+DTYPE_BYTES = 4.0  # fp32 feature maps (TMS320C6678 is a float DSP)
+
+
+def _conv_row_flops(layer: LayerSpec, out_rows: int, out_cols: int,
+                    out_ch: int) -> float:
+    """FLOPs to produce an ``out_rows x out_cols x out_ch`` output region."""
+    if layer.conv_t in (ConvT.CONV, ConvT.POINTWISE):
+        per = 2.0 * layer.in_c * layer.k * layer.k
+    elif layer.conv_t == ConvT.DWCONV:
+        per = 2.0 * layer.k * layer.k
+    elif layer.conv_t == ConvT.POOL:
+        per = 1.0 * layer.k * layer.k
+    elif layer.conv_t == ConvT.FC:
+        # FC: "rows" = sequence positions, cols = 1
+        per = 2.0 * layer.in_c
+    else:  # ADD
+        per = 1.0
+    return per * out_rows * out_cols * out_ch * layer.extra_flop_factor
+
+
+def shard_work(layer: LayerSpec, scheme: Scheme, nodes: int,
+               extra_halo: int = 0) -> ShardWork:
+    """Workload of ``layer`` under ``scheme`` on ``nodes`` devices.
+
+    ``extra_halo`` = extra output rows (per side) this layer must additionally
+    compute because later layers are NT-fused after it (see
+    ``graph.halo_growth``).  Only spatial schemes accept a nonzero halo; OutC
+    cannot run in NT mode (its next layer needs the full input).
+    """
+    oh, ow, oc = layer.out_h, layer.out_w, layer.out_c
+    if extra_halo and not scheme.spatial:
+        raise ValueError("NT halo is undefined for OutC partition")
+
+    flops: List[float] = []
+    obytes: List[float] = []
+    if scheme == Scheme.INH:
+        for rows in split_sizes(oh, nodes):
+            r = min(rows + 2 * extra_halo, oh)
+            flops.append(_conv_row_flops(layer, r, ow, oc))
+            obytes.append(r * ow * oc * DTYPE_BYTES)
+    elif scheme == Scheme.INW:
+        for cols in split_sizes(ow, nodes):
+            c = min(cols + 2 * extra_halo, ow)
+            flops.append(_conv_row_flops(layer, oh, c, oc))
+            obytes.append(oh * c * oc * DTYPE_BYTES)
+    elif scheme == Scheme.OUTC:
+        for ch in split_sizes(oc, nodes):
+            flops.append(_conv_row_flops(layer, oh, ow, ch))
+            obytes.append(oh * ow * ch * DTYPE_BYTES)
+    elif scheme == Scheme.GRID2D:
+        gh, gw = grid_dims(nodes)
+        rsz, csz = split_sizes(oh, gh), split_sizes(ow, gw)
+        cells = [(r, c) for r in rsz for c in csz]
+        per_node_f = [0.0] * nodes
+        per_node_b = [0.0] * nodes
+        for idx, (r, c) in enumerate(cells):
+            node = idx % nodes
+            rr = min(r + 2 * extra_halo, oh)
+            cc = min(c + 2 * extra_halo, ow)
+            per_node_f[node] += _conv_row_flops(layer, rr, cc, oc)
+            per_node_b[node] += rr * cc * oc * DTYPE_BYTES
+        flops, obytes = per_node_f, per_node_b
+    else:  # pragma: no cover
+        raise ValueError(scheme)
+    return ShardWork(tuple(flops), tuple(obytes))
+
+
+def min_shard_extent(layer: LayerSpec, scheme: Scheme, nodes: int) -> int:
+    """Smallest spatial extent any node owns under ``scheme`` — the bound at
+    which an NT halo degenerates into full replication."""
+    if scheme == Scheme.INH:
+        return min(split_sizes(layer.out_h, nodes))
+    if scheme == Scheme.INW:
+        return min(split_sizes(layer.out_w, nodes))
+    if scheme == Scheme.GRID2D:
+        gh, gw = grid_dims(nodes)
+        return min(min(split_sizes(layer.out_h, gh)),
+                   min(split_sizes(layer.out_w, gw)))
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Communication volumes (bytes) for T-mode boundaries.
+# ---------------------------------------------------------------------------
+
+def boundary_bytes_same_scheme(layer: LayerSpec, nxt: LayerSpec,
+                               scheme: Scheme, nodes: int) -> float:
+    """T-mode halo exchange when this layer and the next share a spatial
+    scheme: each interior boundary moves (K_next - 1) rows/cols of the output
+    feature map, both directions.  Returns the *per-busiest-node* byte count
+    (what the latency-dominant node sends+receives)."""
+    halo = max(nxt.k - 1, 0)
+    if halo == 0:
+        return 0.0
+    oh, ow, oc = layer.out_h, layer.out_w, layer.out_c
+    if scheme == Scheme.INH:
+        return 2.0 * halo * ow * oc * DTYPE_BYTES        # two neighbours
+    if scheme == Scheme.INW:
+        return 2.0 * halo * oh * oc * DTYPE_BYTES
+    if scheme == Scheme.GRID2D:
+        gh, gw = grid_dims(nodes)
+        rows = math.ceil(oh / gh)
+        cols = math.ceil(ow / gw)
+        # up/down + left/right + corners
+        return 2.0 * halo * (cols + rows + halo) * oc * DTYPE_BYTES
+    raise ValueError(scheme)
+
+
+def relayout_bytes(layer: LayerSpec, src: Scheme, dst: Scheme,
+                   nodes: int) -> float:
+    """Bytes the busiest node must receive to transform the output of
+    ``layer`` from layout ``src`` into the input layout ``dst`` requires.
+
+    OutC destination needs the *full* feature map on every node (the costly
+    gather the paper calls out); OutC source means every node holds a channel
+    slice of every position, so any spatial destination is an all-to-all.
+    """
+    total = layer.out_elems() * DTYPE_BYTES
+    frac_missing = (nodes - 1) / nodes
+    if dst == Scheme.OUTC:
+        # every node must hold the full input -> gather everything missing
+        return total * frac_missing
+    if src == Scheme.OUTC:
+        # channel slices -> spatial slices: each node keeps 1/nodes of what it
+        # has and scatters the rest; receives (nodes-1)/nodes of its spatial
+        # shard from peers.
+        return (total / nodes) * frac_missing * 2.0
+    if src == dst:
+        return 0.0  # same spatial layout; only halo (handled separately)
+    # spatial -> different spatial (e.g. InH -> InW): full re-shard
+    return (total / nodes) * frac_missing * 2.0

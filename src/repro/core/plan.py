@@ -1,0 +1,111 @@
+"""Partition plans and their cost semantics.
+
+A plan assigns every layer ``L_i`` a pair ``P_i = (p_i, t_i)`` (§3.3).  The
+cost semantics shared by DPP, the exhaustive oracle and all baselines:
+
+* The plan decomposes into **segments** — maximal runs ``[a..b]`` with
+  ``t_a .. t_{b-1} = NT`` and ``t_b = T`` (the last layer is always T,
+  Algorithm 1 lines 11-12).
+* Within a multi-layer segment every layer must use the *same spatial* scheme
+  (halo-fused redundant compute is only meaningful when consecutive layers
+  share a spatial split; OutC needs the full next-layer input, so OutC can
+  never be in NT mode).
+* Layer ``m`` of segment ``[a..b]`` computes an output enlarged by the
+  receptive-field halo ``h_m`` (``graph.halo_growth``) — the redundant
+  computation of §2.3.
+* Each segment end pays the s-cost to re-layout its output into the next
+  segment's scheme; the final layer pays a gather-to-root sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from .cost import Testbed
+from .estimator import CostEstimator
+from .graph import LayerSpec, ModelGraph, halo_growth
+from .partition import Mode, Scheme, min_shard_extent
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """``steps[i] = (scheme, mode)`` for layer i."""
+
+    steps: Tuple[Tuple[Scheme, Mode], ...]
+
+    def __post_init__(self) -> None:
+        if self.steps and self.steps[-1][1] != Mode.T:
+            raise ValueError("last layer must be in T mode")
+
+    def __len__(self) -> int:
+        return len(self.steps)
+
+    def segments(self) -> List[Tuple[int, int]]:
+        """Inclusive (start, end) of each T-terminated segment."""
+        segs, a = [], 0
+        for i, (_, t) in enumerate(self.steps):
+            if t == Mode.T:
+                segs.append((a, i))
+                a = i + 1
+        return segs
+
+    def validate(self) -> None:
+        for a, b in self.segments():
+            if b > a:
+                schemes = {self.steps[m][0] for m in range(a, b + 1)}
+                if len(schemes) != 1:
+                    raise ValueError(
+                        f"segment [{a},{b}] mixes schemes {schemes}")
+                if not self.steps[a][0].spatial:
+                    raise ValueError(
+                        f"segment [{a},{b}] uses non-spatial scheme in NT mode")
+
+
+def plan_cost(graph: ModelGraph, plan: Plan, est: CostEstimator,
+              tb: Testbed) -> float:
+    """Total estimated inference time of ``plan`` (seconds)."""
+    if len(plan) != len(graph):
+        raise ValueError("plan/graph length mismatch")
+    plan.validate()
+    layers = graph.layers
+    total = 0.0
+    segs = plan.segments()
+    for a, b in segs:
+        scheme = plan.steps[a][0]
+        halos = halo_growth(layers[a:b + 1], b - a)
+        for off, m in enumerate(range(a, b + 1)):
+            total += est.i_cost(layers[m], scheme, tb,
+                                extra_halo=halos[off] if b > a else 0)
+        nxt = layers[b + 1] if b + 1 < len(layers) else None
+        dst = plan.steps[b + 1][0] if b + 1 < len(layers) else None
+        total += est.s_cost(layers[b], nxt, scheme, dst, tb)
+    return total
+
+
+def segment_halos(layers: Sequence[LayerSpec], a: int, b: int) -> List[int]:
+    """Halo (extra output rows per side) for each layer of segment [a..b]."""
+    return halo_growth(layers[a:b + 1], b - a)
+
+
+def segment_feasible(layers: Sequence[LayerSpec], a: int, b: int,
+                     scheme: Scheme, nodes: int) -> bool:
+    """A multi-layer NT segment is feasible while its cumulative halo has not
+    degenerated into full replication.  Shared by DPP (as a prune — the halo
+    is monotone in segment length, so breaking early is exact) and by the
+    exhaustive oracle (as a plan filter), keeping their search spaces equal.
+    """
+    if b == a:
+        return True
+    if not scheme.spatial:
+        return False
+    halos = halo_growth(layers[a:b + 1], b - a)
+    return 2 * halos[0] < min_shard_extent(layers[a], scheme, nodes)
+
+
+def plan_feasible(graph: ModelGraph, plan: Plan, nodes: int) -> bool:
+    return all(segment_feasible(graph.layers, a, b, plan.steps[a][0], nodes)
+               for a, b in plan.segments())
+
+
+def fixed_plan(graph: ModelGraph, scheme: Scheme) -> Plan:
+    return Plan(tuple((scheme, Mode.T) for _ in graph.layers))

@@ -1,0 +1,5 @@
+"""From-scratch histogram GBDT (XGBoost stand-in for the cost estimator)."""
+from .gbdt import GBDTRegressor
+from .tree import RegressionTree
+
+__all__ = ["GBDTRegressor", "RegressionTree"]

@@ -1,0 +1,113 @@
+"""Gradient-boosted decision trees (squared error) — XGBoost stand-in."""
+from __future__ import annotations
+
+import io
+from typing import List, Optional
+
+import numpy as np
+
+from .tree import RegressionTree
+
+
+class GBDTRegressor:
+    def __init__(self, n_estimators: int = 120, learning_rate: float = 0.15,
+                 max_depth: int = 6, min_child_weight: float = 2.0,
+                 reg_lambda: float = 1.0, n_bins: int = 64,
+                 subsample: float = 0.9, seed: int = 0):
+        self.n_estimators = n_estimators
+        self.learning_rate = learning_rate
+        self.max_depth = max_depth
+        self.min_child_weight = min_child_weight
+        self.reg_lambda = reg_lambda
+        self.n_bins = n_bins
+        self.subsample = subsample
+        self.seed = seed
+        self.base_: float = 0.0
+        self.trees_: List[RegressionTree] = []
+
+    # ---- binning ----------------------------------------------------------
+    def _make_bins(self, x: np.ndarray) -> List[np.ndarray]:
+        edges = []
+        qs = np.linspace(0, 1, self.n_bins + 1)[1:-1]
+        for f in range(x.shape[1]):
+            e = np.unique(np.quantile(x[:, f], qs))
+            edges.append(e)
+        return edges
+
+    @staticmethod
+    def _bin(x: np.ndarray, edges: List[np.ndarray]) -> np.ndarray:
+        out = np.empty(x.shape, dtype=np.int32)
+        for f, e in enumerate(edges):
+            out[:, f] = np.searchsorted(e, x[:, f], side="left")
+        return out
+
+    # ---- fit / predict ----------------------------------------------------
+    def fit(self, x: np.ndarray, y: np.ndarray,
+            eval_set=None, verbose_every: int = 0) -> "GBDTRegressor":
+        x = np.asarray(x, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        rng = np.random.default_rng(self.seed)
+        edges = self._make_bins(x)
+        binned = self._bin(x, edges)
+        self.base_ = float(y.mean())
+        pred = np.full_like(y, self.base_)
+        self.trees_ = []
+        hess = np.ones_like(y)
+        for t in range(self.n_estimators):
+            grad = pred - y
+            if self.subsample < 1.0:
+                m = rng.random(len(y)) < self.subsample
+                tree = RegressionTree(self.max_depth, self.min_child_weight,
+                                      self.reg_lambda).fit(
+                    binned[m], edges, grad[m], hess[m])
+            else:
+                tree = RegressionTree(self.max_depth, self.min_child_weight,
+                                      self.reg_lambda).fit(
+                    binned, edges, grad, hess)
+            upd = tree.predict(x)
+            pred += self.learning_rate * upd
+            self.trees_.append(tree)
+            if verbose_every and (t + 1) % verbose_every == 0:
+                msg = f"[gbdt] tree {t+1}: train_rmse={np.sqrt(np.mean((pred-y)**2)):.4f}"
+                if eval_set is not None:
+                    ex, ey = eval_set
+                    ep = self.predict(ex)
+                    msg += f" eval_rmse={np.sqrt(np.mean((ep-ey)**2)):.4f}"
+                print(msg)
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, dtype=np.float64)
+        out = np.full(x.shape[0], self.base_)
+        for tree in self.trees_:
+            out += self.learning_rate * tree.predict(x)
+        return out
+
+    # ---- persistence (npz) -------------------------------------------------
+    def save(self, path: str) -> None:
+        flat = {"base": np.array([self.base_]),
+                "lr": np.array([self.learning_rate]),
+                "n_trees": np.array([len(self.trees_)])}
+        for i, tr in enumerate(self.trees_):
+            arr = np.array([[n.feature, n.threshold, n.left, n.right, n.value,
+                             1.0 if n.is_leaf else 0.0] for n in tr.nodes])
+            flat[f"tree_{i}"] = arr
+        np.savez_compressed(path, **flat)
+
+    @classmethod
+    def load(cls, path: str) -> "GBDTRegressor":
+        data = np.load(path)
+        obj = cls(n_estimators=int(data["n_trees"][0]),
+                  learning_rate=float(data["lr"][0]))
+        obj.base_ = float(data["base"][0])
+        obj.trees_ = []
+        from .tree import _Node
+        for i in range(int(data["n_trees"][0])):
+            arr = data[f"tree_{i}"]
+            tr = RegressionTree()
+            tr.nodes = [
+                _Node(feature=int(r[0]), threshold=float(r[1]), left=int(r[2]),
+                      right=int(r[3]), value=float(r[4]), is_leaf=r[5] > 0.5)
+                for r in arr]
+            obj.trees_.append(tr)
+        return obj

@@ -1,0 +1,114 @@
+"""Histogram-based regression tree — the weak learner of our GBDT.
+
+A from-scratch, numpy-only stand-in for XGBoost (offline container).  Uses
+the standard second-order gain with L2 regularization:
+
+    gain = 1/2 * [ GL^2/(HL+lam) + GR^2/(HR+lam) - G^2/(H+lam) ] - gamma
+
+For squared error, g = (pred - y), h = 1.  Features are pre-binned into
+``n_bins`` quantile bins once per GBDT fit; split search is a single
+histogram pass per (node, feature).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Node:
+    feature: int = -1
+    threshold: float = 0.0     # raw-value threshold (go left if x <= thr)
+    left: int = -1
+    right: int = -1
+    value: float = 0.0
+    is_leaf: bool = True
+
+
+class RegressionTree:
+    def __init__(self, max_depth: int = 6, min_child_weight: float = 2.0,
+                 reg_lambda: float = 1.0, gamma: float = 0.0):
+        self.max_depth = max_depth
+        self.min_child_weight = min_child_weight
+        self.reg_lambda = reg_lambda
+        self.gamma = gamma
+        self.nodes: List[_Node] = []
+
+    # binned: (n, d) int32 bin indices; edges: list of per-feature bin edges
+    def fit(self, binned: np.ndarray, edges: List[np.ndarray],
+            grad: np.ndarray, hess: np.ndarray) -> "RegressionTree":
+        self.nodes = []
+        idx = np.arange(binned.shape[0])
+        self._build(binned, edges, grad, hess, idx, 0)
+        return self
+
+    def _leaf_value(self, g: float, h: float) -> float:
+        return -g / (h + self.reg_lambda)
+
+    def _build(self, binned, edges, grad, hess, idx, depth) -> int:
+        node_id = len(self.nodes)
+        self.nodes.append(_Node())
+        g_sum = float(grad[idx].sum())
+        h_sum = float(hess[idx].sum())
+        node = self.nodes[node_id]
+        node.value = self._leaf_value(g_sum, h_sum)
+        if depth >= self.max_depth or h_sum < 2 * self.min_child_weight \
+                or len(idx) < 2:
+            return node_id
+
+        best_gain, best_f, best_bin = 0.0, -1, -1
+        parent_score = g_sum * g_sum / (h_sum + self.reg_lambda)
+        xb = binned[idx]
+        gi, hi = grad[idx], hess[idx]
+        for f in range(binned.shape[1]):
+            nb = len(edges[f]) + 1
+            if nb <= 1:
+                continue
+            gh = np.zeros(nb)
+            hh = np.zeros(nb)
+            np.add.at(gh, xb[:, f], gi)
+            np.add.at(hh, xb[:, f], hi)
+            gl = np.cumsum(gh)[:-1]
+            hl = np.cumsum(hh)[:-1]
+            gr = g_sum - gl
+            hr = h_sum - hl
+            valid = (hl >= self.min_child_weight) & (hr >= self.min_child_weight)
+            if not valid.any():
+                continue
+            gains = (gl * gl / (hl + self.reg_lambda)
+                     + gr * gr / (hr + self.reg_lambda) - parent_score)
+            gains = np.where(valid, gains, -np.inf)
+            b = int(np.argmax(gains))
+            if gains[b] > best_gain + 2 * self.gamma:
+                best_gain, best_f, best_bin = float(gains[b]), f, b
+
+        if best_f < 0:
+            return node_id
+
+        go_left = xb[:, best_f] <= best_bin
+        li, ri = idx[go_left], idx[~go_left]
+        node.is_leaf = False
+        node.feature = best_f
+        node.threshold = float(edges[best_f][best_bin])
+        node.left = self._build(binned, edges, grad, hess, li, depth + 1)
+        node.right = self._build(binned, edges, grad, hess, ri, depth + 1)
+        return node_id
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        n = x.shape[0]
+        out = np.zeros(n)
+        stack = [(0, np.arange(n))]
+        while stack:
+            nid, idx = stack.pop()
+            if idx.size == 0:
+                continue
+            node = self.nodes[nid]
+            if node.is_leaf:
+                out[idx] = node.value
+            else:
+                go_left = x[idx, node.feature] <= node.threshold
+                stack.append((node.left, idx[go_left]))
+                stack.append((node.right, idx[~go_left]))
+        return out

@@ -1,0 +1,69 @@
+"""Pallas TPU conv2d with output-row tiling — the FlexPie compute hot spot.
+
+The edge engine's partitioned inference runs conv shards with halo rows
+(§2.3 of the paper).  This kernel is the TPU-native version of one shard's
+compute: the (pre-padded) input lives in VMEM, the output is tiled by rows,
+and each (kh, kw) kernel tap is an MXU matmul ``[tile_h*W, Cin] @
+[Cin, Cout]`` accumulated in f32 — im2col without materializing the im2col
+matrix.  The halo handling mirrors NT-mode: a tile reads ``K-1`` rows past
+its own range, exactly the redundant-compute region the planner accounts
+for.
+
+Stride-1 convs only (the edge models' 3x3/1x1 layers); strided layers fall
+back to the jnp reference in ops.py.  Validated with interpret=True.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, k: int, tile_h: int, out_w: int,
+                 cin: int, cout: int):
+    i = pl.program_id(0)
+    acc = jnp.zeros((tile_h * out_w, cout), jnp.float32)
+    for kh in range(k):
+        for kw in range(k):
+            # rows [i*tile_h + kh, ...), cols [kw, kw+out_w)
+            xs = x_ref[pl.dslice(i * tile_h + kh, tile_h),
+                       pl.dslice(kw, out_w), :]
+            xm = xs.reshape(tile_h * out_w, cin).astype(jnp.float32)
+            wm = w_ref[kh, kw].astype(jnp.float32)      # [cin, cout]
+            acc = acc + jax.lax.dot_general(
+                xm, wm, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    o_ref[...] = acc.reshape(tile_h, out_w, cout).astype(o_ref.dtype)
+
+
+def conv2d_tiled(x: jnp.ndarray, w: jnp.ndarray, *, padding: int = 0,
+                 tile_h: int = 8, interpret: bool = True) -> jnp.ndarray:
+    """x: [H, W, Cin] (unpadded); w: [K, K, Cin, Cout]; stride 1."""
+    K = w.shape[0]
+    cin, cout = w.shape[2], w.shape[3]
+    xp = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+    Hp, Wp, _ = xp.shape
+    out_h = Hp - K + 1
+    out_w = Wp - K + 1
+    # pad output rows to a tile multiple (extra rows computed then dropped)
+    nt = -(-out_h // tile_h)
+    pad_rows = nt * tile_h - out_h
+    if pad_rows:
+        xp = jnp.pad(xp, ((0, pad_rows), (0, 0), (0, 0)))
+    kernel = functools.partial(_conv_kernel, k=K, tile_h=tile_h, out_w=out_w,
+                               cin=cin, cout=cout)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),     # input in VMEM
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_h, out_w, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt * tile_h, out_w, cout), x.dtype),
+        interpret=interpret,
+    )(xp, w)
+    return out[:out_h]

@@ -1,0 +1,66 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``flash_attention`` takes the model-layout [B, H, S, hd] (+ GQA kv heads),
+pads the sequence to block multiples and dispatches to the kernel;
+``conv2d`` picks the Pallas path for stride-1 convs and the jnp reference
+otherwise.  ``interpret=True`` everywhere in this container (CPU); on a TPU
+deployment the same calls compile natively.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .conv2d import conv2d_tiled
+from .flash_attention import flash_attention_bh
+from .ref import conv2d_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: [B, H, S, hd]; k/v: [B, KV, S, hd] with H % KV == 0."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    blk = max(block_q, block_k)
+    pad = (-S) % blk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    out = flash_attention_bh(
+        q.reshape(B * H, Sp, hd), k.reshape(B * H, Sp, hd),
+        v.reshape(B * H, Sp, hd), causal=causal, window=window,
+        scale=1.0 / math.sqrt(hd), block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return out.reshape(B, H, Sp, hd)[:, :, :S, :]
+
+
+@functools.partial(jax.jit, static_argnames=("padding", "stride", "tile_h",
+                                             "interpret"))
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, padding: int = 0,
+           stride: int = 1, tile_h: int = 8,
+           interpret: bool = True) -> jnp.ndarray:
+    """x: [H, W, Cin]; w: [K, K, Cin, Cout]."""
+    if stride == 1:
+        return conv2d_tiled(x, w, padding=padding, tile_h=tile_h,
+                            interpret=interpret)
+    # strided layers: jnp reference path (kernel targets the stride-1
+    # 3x3/1x1 bulk of the edge benchmarks)
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding=[(padding, padding)] * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out[0].astype(x.dtype)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """q/k/v: [B, H, S, hd] (same head count; GQA expansion happens in the
+    wrapper).  Naive softmax attention with causal / sliding-window mask."""
+    B, H, S, hd = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)   # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, *, padding: int = 0
+               ) -> jnp.ndarray:
+    """x: [H, W, Cin]; w: [K, K, Cin, Cout]; stride 1.  -> [Ho, Wo, Cout]."""
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1, 1), padding=[(padding, padding)] * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out[0].astype(x.dtype)

@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init).  512 placeholder CPU devices back both the single-pod
+(16, 16) mesh and the multi-pod (2, 16, 16) mesh.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k [--multi-pod] [--strategy auto] [--out out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.pipeline import make_batch_specs
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import Roofline, model_flops_estimate
+from repro.models.transformer import Model
+from repro.optim import adamw_init
+from repro.runtime.planner import choose_strategy
+from repro.runtime.shard_ctx import (activation_sharding, batch_shard_fn,
+                                     seq_shard_fn)
+from repro.runtime.shard_plan import (Strategy, batch_specs, cache_specs,
+                                      data_axes, named, opt_specs,
+                                      param_specs)
+from repro.runtime.steps import (make_decode_step, make_prefill_step,
+                                 make_train_step)
+
+# (seq_len, global_batch, mode)
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+LONG_WINDOW = 4_096   # sliding window used by all archs at 500k context
+
+
+def arch_for_shape(arch: str, shape: str):
+    cfg = get_config(arch)
+    if shape == "long_500k" and cfg.family in ("dense", "vlm", "moe",
+                                               "encdec"):
+        # sub-quadratic requirement: sliding-window attention variant
+        cfg = dataclasses.replace(cfg, attn_window=LONG_WINDOW)
+    return cfg
+
+
+def build_inputs(cfg, model: Model, shape: str, mesh, st: Strategy,
+                 accum: int = 1):
+    """(arg shapes, in_shardings, out_shardings, step_fn, meta)."""
+    seq, batch, mode = SHAPES[shape]
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda: model.init(key))
+    p_spec = param_specs(params_shape, mesh, st, mode)
+    p_sh = named(p_spec, mesh)
+    dp = data_axes(mesh)
+
+    if mode == "train":
+        opt_shape = jax.eval_shape(lambda: adamw_init(params_shape))
+        o_spec = opt_specs(p_spec, params_shape)
+        o_sh = named(o_spec, mesh)
+        b_shape = make_batch_specs(cfg, seq, batch, mode="train")
+        b_sh = named(batch_specs(b_shape, mesh), mesh)
+        step = make_train_step(model, accum=accum)
+        args = (params_shape, opt_shape, b_shape)
+        in_sh = (p_sh, o_sh, b_sh)
+        out_sh = (p_sh, o_sh, NamedSharding(mesh, P()))
+        return args, in_sh, out_sh, step, {"mode": mode, "seq": seq,
+                                           "batch": batch}
+
+    if mode == "prefill":
+        b_shape = make_batch_specs(cfg, seq, batch, mode="prefill")
+        b_sh = named(batch_specs(b_shape, mesh), mesh)
+        base = make_prefill_step(model)
+
+        def step(params, b):
+            return base(params, b)[:, -1, :]
+        v_ok = cfg.vocab % mesh.shape["model"] == 0
+        out_sh = NamedSharding(mesh, P(dp, "model") if v_ok else P(dp, None))
+        return (params_shape, b_shape), (p_sh, b_sh), out_sh, step, \
+            {"mode": mode, "seq": seq, "batch": batch}
+
+    # decode
+    cap = min(seq, cfg.attn_window or seq)
+    cache_shape = jax.eval_shape(lambda: model.cache_init(batch, cap))
+    c_spec = cache_specs(cache_shape, mesh, st)
+    c_sh = named(c_spec, mesh)
+    tok = ShapeDtypeStruct((batch, 1), jnp.int32)
+    t = ShapeDtypeStruct((), jnp.int32)
+    dpn = _dpn(mesh)
+    b_sharded = batch % dpn == 0 and batch > 1
+    tok_sh = NamedSharding(mesh, P(dp, None) if b_sharded else P(None, None))
+    t_sh = NamedSharding(mesh, P())
+    step = make_decode_step(model)
+    v_ok = cfg.vocab % mesh.shape["model"] == 0
+    logit_sh = NamedSharding(
+        mesh, P(dp if b_sharded else None, None,
+                "model" if v_ok else None))
+    args = (params_shape, cache_shape, tok, t)
+    in_sh = (p_sh, c_sh, tok_sh, t_sh)
+    out_sh = (logit_sh, c_sh)
+    return args, in_sh, out_sh, step, {"mode": mode, "seq": seq,
+                                       "batch": batch, "capacity": cap}
+
+
+def _dpn(mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool = False,
+            strategy: Optional[Strategy] = None,
+            cfg_transform=None, accum: int = 1,
+            verbose: bool = True) -> dict:
+    cfg = arch_for_shape(arch, shape)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    seq, batch, mode = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    st = strategy or choose_strategy(cfg, mesh, mode)
+    model = Model(cfg)
+    t0 = time.time()
+    args, in_sh, out_sh, step, meta = build_inputs(cfg, model, shape, mesh,
+                                                   st, accum=accum)
+    # activation constraint = the planner's scheme choice made concrete.
+    # SSM/hybrid time-scans cannot shard the sequence axis (recurrence);
+    # decode steps have S=1 — both fall back to batch-only sharding.
+    sp_ok = (mode != "decode" and cfg.family not in ("ssm", "hybrid")
+             and (st.attn == "sp" or st.ffn == "sp"))
+    act_fn = (seq_shard_fn(mesh, data_axes(mesh)) if sp_ok
+              else batch_shard_fn(mesh, data_axes(mesh)))
+    with mesh, activation_sharding(act_fn):
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+
+    # loop-aware accounting via the in-repo HLO analyzer (XLA cost_analysis
+    # counts while bodies once — see launch/hlo_cost.py)
+    tot = analyze_hlo(compiled.as_text())
+    coll = {k.split(":", 1)[1]: v for k, v in tot.items()
+            if k.startswith("coll:")}
+    roof = Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    hlo_flops=tot["flops"], hlo_bytes=tot["bytes"],
+                    coll_bytes=coll,
+                    model_flops=model_flops_estimate(cfg, seq, batch, mode))
+    rec = roof.row()
+    rec.update({
+        "strategy": dataclasses.asdict(st),
+        "compile_s": round(time.time() - t0, 1),
+        "mem_per_device": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+        **meta,
+    })
+    if verbose:
+        print(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    # explicit FCO decision variables (default: the planner decides)
+    ap.add_argument("--attn", choices=("tp", "sp"))
+    ap.add_argument("--ffn", choices=("tp", "sp"))
+    ap.add_argument("--moe", choices=("ep", "tp"))
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--resident", action="store_true",
+                    help="decode: TP-resident weights (no data-axis shard)")
+    ap.add_argument("--ssm-chunk", type=int, default=0,
+                    help="chunk-parallel SSM scan width (0 = recurrent)")
+    args = ap.parse_args(argv)
+
+    strategy = None
+    if args.attn or args.ffn or args.moe or args.no_fsdp or args.resident:
+        strategy = Strategy(attn=args.attn or "sp", ffn=args.ffn or "tp",
+                            moe=args.moe or "ep", fsdp=not args.no_fsdp,
+                            decode_resident=args.resident)
+    cfg_transform = None
+    if args.ssm_chunk:
+        def cfg_transform(cfg, _n=args.ssm_chunk):
+            if cfg.ssm is None:
+                return cfg
+            return dataclasses.replace(
+                cfg, ssm=dataclasses.replace(cfg.ssm, chunk=_n))
+
+    records = []
+    if args.all:
+        combos = [(a, s, mp) for a in ARCH_IDS for s in SHAPES
+                  for mp in (False, True)]
+    else:
+        combos = [(args.arch, args.shape, args.multi_pod)]
+    for arch, shape, mp in combos:
+        print(f"== dryrun {arch} {shape} mesh={'2x16x16' if mp else '16x16'}",
+              flush=True)
+        records.append(run_one(arch, shape, multi_pod=mp, strategy=strategy,
+                               cfg_transform=cfg_transform))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1, default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

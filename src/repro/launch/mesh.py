@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before any jax use.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Small mesh over whatever devices exist (CPU tests)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

@@ -1,0 +1,173 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms per (arch, shape, mesh):
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` supplies FLOPs and bytes; collective bytes are parsed
+from the optimized HLO (operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Bytes produced by each collective category in the SPMD-partitioned
+    module — per-device quantities, since post-SPMD shapes are per-shard.
+
+    Line-based parse: ``%name = <result shapes> <op>(...)``; async pairs
+    (``-start``/``-done``) are counted once via the ``-start`` op.
+    """
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        for op in _COLL_OPS:
+            tok = f" {op}("
+            tok_start = f" {op}-start("
+            use = None
+            if tok_start in line:
+                use = line.split(tok_start)[0]
+            elif tok in line and f"{op}-done" not in line:
+                use = line.split(tok)[0]
+            if use is not None:
+                # result shapes are on the lhs of the op token
+                rhs = use.split("=", 1)[-1]
+                out[op] = out.get(op, 0) + _shape_bytes(rhs)
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float                 # per device (cost_analysis is post-SPMD)
+    hlo_bytes: float                 # per device
+    coll_bytes: Dict[str, int]       # per device
+    model_flops: float = 0.0         # whole model (all chips)
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        # collective bytes are already per-device; each device drives ~4 ICI
+        # links on a v5e torus — credit one link (conservative)
+        return sum(self.coll_bytes.values()) / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": dict(self.coll_bytes),
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float = 0.0) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    hlo_flops=flops, hlo_bytes=byts, coll_bytes=coll,
+                    model_flops=model_flops)
+
+
+def model_flops_estimate(cfg, seq: int, batch: int, mode: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference forward), with
+    N = active params (MoE counts routed active + shared)."""
+    # active params per token
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+    per_layer = 0.0
+    hd = cfg.hd if cfg.n_heads else 0
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.mla:
+            m = cfg.mla
+            attn = (d * m.q_lora + m.q_lora * cfg.n_heads * (m.qk_nope
+                                                             + m.qk_rope)
+                    + d * m.kv_lora + d * m.qk_rope
+                    + m.kv_lora * cfg.n_heads * (m.qk_nope + m.v_head)
+                    + cfg.n_heads * m.v_head * d)
+        else:
+            attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv * hd \
+                + cfg.n_heads * hd * d
+        if cfg.moe:
+            mo = cfg.moe
+            ffn = 3 * d * mo.d_ff_expert * (mo.top_k + mo.n_shared)
+        else:
+            ffn = (3 if cfg.act == "swiglu" else 2) * d * cfg.d_ff
+        per_layer = attn + ffn
+    elif cfg.family == "ssm":
+        per_layer = 6 * d * d + 2 * d * cfg.d_ff   # r,k,v,g,decay,out + cm
+    elif cfg.family == "hybrid":
+        din = cfg.ssm.expand * d
+        per_layer = 2 * d * din + din * d          # z,x,out projections
+    elif cfg.family == "encdec":
+        attn = 4 * d * d
+        per_layer = attn * 2 + (2 * d * cfg.d_ff)  # self+cross, gelu mlp
+    n_active = emb + L * per_layer
+    tokens = batch * (seq if mode in ("train", "prefill") else 1)
+    mult = 6.0 if mode == "train" else 2.0
+    return mult * n_active * tokens

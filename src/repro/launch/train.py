@@ -1,0 +1,81 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Two modes:
+  * default        — run real optimizer steps (reduced or full config) on
+                     the local devices with the production sharding rules;
+  * ``--dry-run``  — lower + compile the production-mesh train step only
+                     (delegates to launch.dryrun; no execution).
+
+On this CPU container only reduced configs run in real mode; the full
+configs are exercised through the dry-run path (the same code a TPU pod
+would execute).
+"""
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (default: reduced smoke variant)")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        from repro.launch import dryrun
+        return dryrun.main(["--arch", args.arch, "--shape", args.shape])
+
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint import save_pytree
+    from repro.configs.registry import get_config
+    from repro.data import SyntheticLMDataset
+    from repro.models.transformer import Model
+    from repro.optim import adamw_init
+    from repro.runtime.steps import make_train_step
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n / 1e6:.1f}M params, {len(jax.devices())} devices")
+
+    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=args.seq,
+                            global_batch=args.batch, seed=0)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(model, total=args.steps,
+                                   warmup=max(1, args.steps // 10),
+                                   accum=args.accum))
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), ds):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jnp.zeros(
+                (args.batch, cfg.vision_tokens, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        if cfg.family == "encdec":
+            batch["audio_embeds"] = jnp.zeros(
+                (args.batch, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        params, opt, m = step(params, opt, batch)
+        if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    if args.ckpt:
+        save_pytree(params, args.ckpt)
+        print(f"checkpoint -> {args.ckpt}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,425 @@
+"""Attention blocks: GQA (dense archs), MLA (DeepSeek-V2), cross-attention
+(Whisper), with full/prefill and KV-cache decode paths, causal + sliding
+window masks, RoPE / M-RoPE."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_mrope, apply_rope, dense_init
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def init_attn(cfg, key) -> dict:
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dt),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv * hd, dt),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv * hd, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv * hd,), dt)
+    return p
+
+
+def init_mla(cfg, key) -> dict:
+    m = cfg.mla
+    ks = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.dtype)
+    qk_head = m.qk_nope + m.qk_rope
+    return {
+        "w_dq": dense_init(ks[0], cfg.d_model, m.q_lora, dt),
+        "w_uq": dense_init(ks[1], m.q_lora, cfg.n_heads * qk_head, dt),
+        "w_dkv": dense_init(ks[2], cfg.d_model, m.kv_lora, dt),
+        "w_kr": dense_init(ks[3], cfg.d_model, m.qk_rope, dt),
+        # stored [H, qk_nope, kv_lora] for the absorbed decode path
+        "w_uk": dense_init(ks[4], m.kv_lora, cfg.n_heads * m.qk_nope,
+                           dt).reshape(m.kv_lora, cfg.n_heads, m.qk_nope)
+                 .transpose(1, 2, 0),
+        "w_uv": dense_init(ks[5], m.kv_lora, cfg.n_heads * m.v_head,
+                           dt).reshape(m.kv_lora, cfg.n_heads, m.v_head)
+                 .transpose(1, 0, 2),
+        "wo": dense_init(ks[6], cfg.n_heads * m.v_head, cfg.d_model, dt),
+    }
+
+
+def init_cross_attn(cfg, key) -> dict:
+    return init_attn(cfg, key)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+def _causal_window_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                        window: Optional[int]) -> jnp.ndarray:
+    """[..., Q, K] boolean mask: causal, optionally sliding-window."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          mask: Optional[jnp.ndarray], scale: float) -> jnp.ndarray:
+    """q [B,K,G,Q,hd], k/v [B,K,S,hd] (grouped-query layout).
+
+    Dots run in the operand dtype (a TPU MXU accumulates bf16 dots in f32
+    natively; forcing f32 operands makes XLA materialize an f32 copy of the
+    whole KV cache) — only the scores are upcast for the softmax."""
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bksd->bkgqd", w, v)
+
+
+CHUNKED_SEQ_THRESHOLD = 2048   # use online-softmax streaming above this
+_KV_CHUNK = 512
+
+
+def _chunk_kv(k, v, k_pos):
+    B, KV, S, dk = k.shape
+    dv = v.shape[-1]
+    nc = -(-S // _KV_CHUNK)
+    pad = nc * _KV_CHUNK - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-10 ** 9)
+    kc = k.reshape(B, KV, nc, _KV_CHUNK, dk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, KV, nc, _KV_CHUNK, dv).transpose(2, 0, 1, 3, 4)
+    pc = k_pos.reshape(B, nc, _KV_CHUNK).transpose(1, 0, 2)
+    return kc, vc, pc, pad
+
+
+def _chunk_valid(pb, q_pos, window, causal):
+    valid = pb[:, None, None, None, :] >= 0
+    if causal:
+        valid &= pb[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+    if window is not None:
+        valid &= pb[:, None, None, None, :] > \
+            (q_pos[:, None, None, :, None] - window)
+    return valid
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _chunked_sdpa(q, k, v, q_pos, k_pos, window, scale, causal):
+    """Streaming attention (the jnp twin of the Pallas flash kernel): scan
+    over key chunks with an online softmax; the [Q,S] score matrix is never
+    materialized — in the backward either (flash backward via custom_vjp,
+    recomputing per-chunk scores from the saved logsumexp).
+
+    q [B,KV,G,Q,dk]; k [B,KV,S,dk]; v [B,KV,S,dv]; q_pos [B,Q]; k_pos [B,S].
+    """
+    out, _ = _flash_fwd_core(q, k, v, q_pos, k_pos, window, scale, causal)
+    return out
+
+
+def _flash_fwd_core(q, k, v, q_pos, k_pos, window, scale, causal):
+    B, KV, G, Q, dk = q.shape
+    dv = v.shape[-1]
+    kc, vc, pc, _ = _chunk_kv(k, v, k_pos)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb = inp
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", q, kb).astype(jnp.float32) \
+            * scale
+        s = jnp.where(_chunk_valid(pb, q_pos, window, causal), s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p.astype(q.dtype), vb).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Q), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Q), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Q, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, q_pos, k_pos, window, scale, causal):
+    out, lse = _flash_fwd_core(q, k, v, q_pos, k_pos, window, scale, causal)
+    return out, (q, k, v, q_pos, k_pos, out, lse)
+
+
+def _flash_bwd(window, scale, causal, res, dout):
+    q, k, v, q_pos, k_pos, out, lse = res
+    B, KV, G, Q, dkh = q.shape
+    kc, vc, pc, pad = _chunk_kv(k, v, k_pos)
+    # D = rowsum(dout * out)
+    D = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                axis=-1)                                       # [B,KV,G,Q]
+
+    def step(dq, inp):
+        kb, vb, pb = inp
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", q, kb).astype(jnp.float32) \
+            * scale
+        s = jnp.where(_chunk_valid(pb, q_pos, window, causal), s, -1e30)
+        p = jnp.exp(s - lse[..., None])                        # [B,KV,G,Q,C]
+        pq = p.astype(q.dtype)
+        dv_b = jnp.einsum("bkgqc,bkgqd->bkcd", pq, dout)
+        dp = jnp.einsum("bkgqd,bkcd->bkgqc", dout, vb).astype(jnp.float32)
+        ds = (p * (dp - D[..., None]) * scale).astype(q.dtype)
+        dq = dq + jnp.einsum("bkgqc,bkcd->bkgqd", ds, kb).astype(jnp.float32)
+        dk_b = jnp.einsum("bkgqc,bkgqd->bkcd", ds, q)
+        return dq, (dk_b, dv_b)
+
+    dq0 = jnp.zeros(q.shape, jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(step, dq0, (kc, vc, pc))
+    nc = kc.shape[0]
+    dk = dk_c.transpose(1, 2, 0, 3, 4).reshape(B, KV, nc * _KV_CHUNK, dkh)
+    dv = dv_c.transpose(1, 2, 0, 3, 4).reshape(B, KV, nc * _KV_CHUNK,
+                                               v.shape[-1])
+    if pad:
+        dk = dk[:, :, :-pad]
+        dv = dv[:, :, :-pad]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+_chunked_sdpa.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# GQA full forward (train / prefill / encoder / cross)
+# ---------------------------------------------------------------------------
+
+def gqa_full(cfg, p: dict, x: jnp.ndarray, *, causal: bool = True,
+             pos: Optional[jnp.ndarray] = None,
+             pos3: Optional[jnp.ndarray] = None,
+             kv_x: Optional[jnp.ndarray] = None,
+             window: Optional[int] = None,
+             return_kv: bool = False):
+    """x [B,S,d].  ``kv_x`` switches to cross-attention (no mask, no rope on
+    encoder side handled by caller convention: rope only when pos given)."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    H, KV = cfg.n_heads, cfg.n_kv
+    G = H // KV
+    src = kv_x if kv_x is not None else x
+    Skv = src.shape[1]
+
+    q = x @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd).transpose(0, 2, 1, 3)       # [B,H,S,hd]
+    k = k.reshape(B, Skv, KV, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, Skv, KV, hd).transpose(0, 2, 1, 3)
+
+    if pos is not None and cfg.rope_kind == "rope":
+        q = apply_rope(q, pos[:, None, :], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None, :], cfg.rope_theta)
+    elif pos3 is not None and cfg.rope_kind == "mrope":
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+
+    qg = q.reshape(B, KV, G, S, hd)
+    if kv_x is None and S >= CHUNKED_SEQ_THRESHOLD:
+        qp = pos if pos is not None else \
+            jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        out = _chunked_sdpa(qg, k, v, qp, qp, window, 1.0 / math.sqrt(hd),
+                            causal)
+    else:
+        mask = None
+        if causal and kv_x is None:
+            qp = pos if pos is not None else jnp.arange(S)[None, :]
+            mask = _causal_window_mask(qp, qp, window)[:, None, None, :, :]
+        out = _sdpa(qg, k, v, mask, 1.0 / math.sqrt(hd))
+    out = out.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    out = out @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA decode with KV cache (ring buffer when cfg.attn_window is set)
+# ---------------------------------------------------------------------------
+
+def gqa_cache_init(cfg, batch: int, capacity: int, dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, cfg.n_kv, capacity, cfg.hd), dtype),
+        "v": jnp.zeros((batch, cfg.n_kv, capacity, cfg.hd), dtype),
+    }
+
+
+def gqa_decode(cfg, p: dict, x: jnp.ndarray, cache: dict,
+               t: jnp.ndarray, rope_pos=None) -> Tuple[jnp.ndarray, dict]:
+    """One-token step.  x [B,1,d]; ``t`` scalar int32 = cache position;
+    ``rope_pos`` overrides the rotary coordinate (VLM text streams are offset
+    from cache slots by the vision prefix).  Keys are rope'd before caching,
+    so the ring buffer (sliding window) needs only a validity mask — softmax
+    is permutation-invariant over slots."""
+    B = x.shape[0]
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv
+    G = H // KV
+    cap = cache["k"].shape[2]
+
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, 1, H, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, 1, KV, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, 1, KV, hd).transpose(0, 2, 1, 3)
+    if cfg.rope_kind in ("rope", "mrope"):
+        # decode treats all streams as text -> plain rope is exact for mrope
+        rp = t if rope_pos is None else rope_pos
+        posb = jnp.full((B, 1), rp, jnp.int32)
+        q = apply_rope(q, posb[:, None, :], cfg.rope_theta)
+        k = apply_rope(k, posb[:, None, :], cfg.rope_theta)
+
+    slot = (t % cap if cfg.attn_window is not None else t).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
+
+    n_valid = jnp.minimum(t + 1, cap)
+    valid = (jnp.arange(cap) < n_valid)[None, None, None, None, :]
+    qg = q.reshape(B, KV, G, 1, hd)
+    out = _sdpa(qg, ck, cv, valid, 1.0 / math.sqrt(hd))
+    out = out.reshape(B, H, 1, hd).transpose(0, 2, 1, 3).reshape(B, 1, H * hd)
+    return out @ p["wo"], {"k": ck, "v": cv}
+
+
+def cross_kv(cfg, p: dict, enc: jnp.ndarray) -> Tuple[jnp.ndarray,
+                                                      jnp.ndarray]:
+    """Precompute cross-attention K/V from encoder output (serve-time cache:
+    recomputing these per decode token dominated whisper's memory term)."""
+    B, S, _ = enc.shape
+    hd, KV = cfg.hd, cfg.n_kv
+    k = enc @ p["wk"]
+    v = enc @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, KV, hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def gqa_cross_cached(cfg, p: dict, x: jnp.ndarray, xk: jnp.ndarray,
+                     xv: jnp.ndarray) -> jnp.ndarray:
+    """Cross-attention against precomputed K/V.  x [B,Q,d]."""
+    B, Q, _ = x.shape
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv
+    G = H // KV
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, Q, H, hd).transpose(0, 2, 1, 3).reshape(B, KV, G, Q, hd)
+    out = _sdpa(q, xk, xv, None, 1.0 / math.sqrt(hd))
+    out = out.reshape(B, H, Q, hd).transpose(0, 2, 1, 3).reshape(B, Q, H * hd)
+    return out @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent KV cache; expanded prefill, absorbed decode
+# ---------------------------------------------------------------------------
+
+def mla_full(cfg, p: dict, x: jnp.ndarray, *,
+             pos: Optional[jnp.ndarray] = None,
+             window: Optional[int] = None) -> jnp.ndarray:
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk_head = m.qk_nope + m.qk_rope
+
+    q = (x @ p["w_dq"]) @ p["w_uq"]
+    q = q.reshape(B, S, H, qk_head).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :m.qk_nope], q[..., m.qk_nope:]
+
+    c_kv = x @ p["w_dkv"]                                  # [B,S,kvl]
+    k_rope = x @ p["w_kr"]                                 # [B,S,rope]
+    if pos is None:
+        pos = jnp.arange(S)[None, :].astype(jnp.int32)
+    q_rope = apply_rope(q_rope, pos[:, None, :], cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, None], pos[:, None, :],
+                        cfg.rope_theta)[:, 0]
+
+    # expanded prefill: materialize per-head k/v, then shared SDPA paths
+    k_nope = jnp.einsum("bsl,hdl->bhsd", c_kv, p["w_uk"])
+    v = jnp.einsum("bsl,hlv->bhsv", c_kv, p["w_uv"])
+    q_eff = jnp.concatenate([q_nope, q_rope], axis=-1)      # [B,H,S,qk]
+    k_eff = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, None], k_nope.shape[:-1]
+                                  + (m.qk_rope,))], axis=-1)
+    scale = 1.0 / math.sqrt(qk_head)
+    qg = q_eff[:, :, None]                                  # [B,H,1,S,qk]
+    if S >= CHUNKED_SEQ_THRESHOLD:
+        out = _chunked_sdpa(qg, k_eff, v, pos, pos, window, scale, True)
+    else:
+        mask = _causal_window_mask(pos, pos, window)[:, None, None, :, :]
+        out = _sdpa(qg, k_eff, v, mask, scale)
+    out = out[:, :, 0].transpose(0, 2, 1, 3).reshape(B, S, H * m.v_head)
+    return out @ p["wo"]
+
+
+def mla_cache_init(cfg, batch: int, capacity: int, dtype) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, capacity, m.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, capacity, m.qk_rope), dtype),
+    }
+
+
+def mla_decode(cfg, p: dict, x: jnp.ndarray, cache: dict,
+               t: jnp.ndarray, rope_pos=None) -> Tuple[jnp.ndarray, dict]:
+    """Absorbed decode: scores and values computed in the latent space —
+    the cache stays [B,S,kv_lora+rope], the MLA memory win."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    qk_head = m.qk_nope + m.qk_rope
+    cap = cache["c_kv"].shape[1]
+
+    q = (x @ p["w_dq"]) @ p["w_uq"]
+    q = q.reshape(B, 1, H, qk_head).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :m.qk_nope], q[..., m.qk_nope:]
+    posb = jnp.full((B, 1), t if rope_pos is None else rope_pos, jnp.int32)
+    q_rope = apply_rope(q_rope, posb[:, None, :], cfg.rope_theta)
+
+    c_new = (x @ p["w_dkv"]).reshape(B, 1, m.kv_lora)
+    kr_new = apply_rope((x @ p["w_kr"]).reshape(B, 1, 1, m.qk_rope),
+                        posb[:, None, :], cfg.rope_theta).reshape(B, 1,
+                                                                  m.qk_rope)
+    slot = (t % cap if cfg.attn_window is not None else t).astype(jnp.int32)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new,
+                                          (0, slot, 0))
+
+    q_lat = jnp.einsum("bhqd,hdl->bhql", q_nope, p["w_uk"])
+    scores = (jnp.einsum("bhql,bsl->bhqs", q_lat, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhqd,bsd->bhqs", q_rope, k_rope,
+                           preferred_element_type=jnp.float32))
+    scores = scores / math.sqrt(qk_head)
+    n_valid = jnp.minimum(t + 1, cap)
+    valid = (jnp.arange(cap) < n_valid)[None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out_lat = jnp.einsum("bhqs,bsl->bhql", w, c_kv)
+    out = jnp.einsum("bhql,hlv->bhqv", out_lat, p["w_uv"])
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, H * m.v_head)
+    return out @ p["wo"], {"c_kv": c_kv, "k_rope": k_rope}

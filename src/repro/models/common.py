@@ -1,0 +1,162 @@
+"""Shared model building blocks (pure-functional JAX, params as pytrees)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, weight: Optional[jnp.ndarray],
+            eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if weight is not None:
+        x = x * weight.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def layernorm(x: jnp.ndarray, weight: Optional[jnp.ndarray],
+              bias: Optional[jnp.ndarray], eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        x = x * weight.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def apply_norm(cfg, x: jnp.ndarray, p: Optional[dict]) -> jnp.ndarray:
+    """Dispatch on cfg.norm; ``nonparam_ln`` (OLMo) has no params at all."""
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["w"] if p else None)
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["w"] if p else None, p.get("b") if p else None)
+    if cfg.norm == "nonparam_ln":
+        return layernorm(x, None, None)
+    raise ValueError(cfg.norm)
+
+
+def norm_params(cfg, key, d: int, dtype) -> Optional[dict]:
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    return {}  # nonparam_ln: empty (keeps pytree structure stable)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE + sinusoidal abs-pos for whisper)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, hd]; pos: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # [hd/2]
+    ang = pos[..., None].astype(jnp.float32) * freqs   # [..., S, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, pos3: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.  x: [B, H, S, hd]; ``pos3``: [B, 3, S]
+    (temporal, height, width coordinate streams).  ``sections`` partition the
+    hd/2 frequency slots among the 3 streams; text tokens carry identical
+    coords in all three streams, making this exactly standard RoPE for text."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                      # [hd/2]
+    # which position stream drives each frequency slot
+    sel = np.concatenate([np.full((s,), i) for i, s in enumerate(sections)])
+    pos_sel = jnp.take(pos3.transpose(0, 2, 1), jnp.asarray(sel),
+                       axis=-1)                        # [B, S, hd/2]
+    ang = pos_sel.astype(jnp.float32)[:, None, :, :] * freqs  # [B,1,S,hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_at(t: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Sinusoidal embedding [d] for a single (traced) position scalar."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = t.astype(jnp.float32) / (10000 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+def sinusoidal_pos(seq: int, d: int) -> jnp.ndarray:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    if name == "swiglu":
+        raise ValueError("swiglu is handled inside the MLP (two inputs)")
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "silu":
+        return jax.nn.silu
+    raise ValueError(name)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token CE in fp32. logits [..., V], labels [...] int.
+
+    The gold logit is extracted with a masked reduction (iota compare), not
+    a gather — gathers over a vocab-sharded axis force an all-gather of the
+    full logits under SPMD; the masked sum partitions cleanly.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab = logits.shape[-1]
+    onehot = labels[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1,) * (labels.ndim) + (vocab,), labels.ndim)
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

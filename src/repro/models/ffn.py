@@ -1,0 +1,119 @@
+"""Feed-forward blocks: dense MLP (SwiGLU / GELU) and capacity-based MoE.
+
+The MoE dispatch is gather/scatter with a fixed per-expert capacity (GShard
+style but without the quadratic one-hot dispatch einsum): token->slot
+positions come from a cumulative count per expert; overflow tokens drop
+(standard capacity-factor semantics).  Expert compute is three batched
+einsums over an [E, C, d] buffer — MXU-friendly and shardable over an
+expert-parallel axis.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+
+def init_mlp(cfg, key, d_ff: Optional[int] = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"w_gate": dense_init(k1, cfg.d_model, d_ff, dt),
+                "w_up": dense_init(k2, cfg.d_model, d_ff, dt),
+                "w_down": dense_init(k3, d_ff, cfg.d_model, dt)}
+    k1, k2 = jax.random.split(key, 2)
+    return {"w_up": dense_init(k1, cfg.d_model, d_ff, dt),
+            "b_up": jnp.zeros((d_ff,), dt),
+            "w_down": dense_init(k2, d_ff, cfg.d_model, dt),
+            "b_down": jnp.zeros((cfg.d_model,), dt)}
+
+
+def mlp(cfg, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.act == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"] + p["b_up"]) @ p["w_down"] + p["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def init_moe(cfg, key) -> dict:
+    m = cfg.moe
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    E, d, f = m.n_experts, cfg.d_model, m.d_ff_expert
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32)
+                   * scale).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32)
+                 * scale).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, f, d), jnp.float32)
+                   / jnp.sqrt(jnp.float32(f))).astype(dt),
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(cfg, ks[4], d_ff=m.d_ff_expert * m.n_shared)
+    return p
+
+
+def moe(cfg, p: dict, x: jnp.ndarray,
+        capacity: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B,S,d] -> (out, aux_loss).  Top-k routing with a fixed per-expert
+    capacity, computed PER GROUP (group = batch row, GShard style): slot
+    positions come from a cumulative count over each group's own tokens
+    only, so the dispatch never synchronizes across data-parallel shards —
+    the global-cumsum variant all-reduced a [T*K, E] counter matrix across
+    the whole mesh (found and fixed in the §Perf collective hillclimb)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    G = B                       # groups = batch rows (data-shard aligned)
+    xt = x.reshape(G, S, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])            # [G,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                        # [G,S,K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch style, global)
+    me = probs.reshape(T, E).mean(0)                           # [E]
+    ce = jnp.zeros((E,)).at[idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce) * m.router_aux_weight
+
+    C = capacity or max(1, int(S * K * m.capacity_factor / E))
+    # slot position of each (token, k) assignment inside (group, expert)
+    flat_e = idx.reshape(G, S * K)                             # [G,S*K]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # [G,S*K,E]
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot             # exclusive
+    pos = jnp.take_along_axis(pos_in_e, flat_e[..., None],
+                              axis=2)[..., 0]                  # [G,S*K]
+    keep = pos < C
+    # buffer layout [E, G*C, d]: slot = e*(G*C) + g*C + pos
+    gidx = jnp.arange(G, dtype=jnp.int32)[:, None]
+    slot = flat_e * (G * C) + gidx * C + jnp.minimum(pos, C - 1)
+
+    buf = jnp.zeros((E * G * C, d), x.dtype)
+    src = jnp.repeat(xt.reshape(G, S, d), K, axis=1)           # [G,S*K,d]
+    buf = buf.at[jnp.where(keep, slot, E * G * C).reshape(-1)].add(
+        src.reshape(-1, d), mode="drop")                       # drop overflow
+    ebuf = buf.reshape(E, G * C, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ebuf, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", ebuf, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * G * C, d)
+
+    gathered = y[jnp.minimum(slot, E * G * C - 1).reshape(-1)]  # [G*S*K,d]
+    gathered = jnp.where(keep.reshape(-1)[:, None], gathered, 0.0)
+    w = gate.reshape(-1)[:, None].astype(x.dtype)
+    out = (gathered * w).reshape(T, K, d).sum(axis=1).reshape(B, S, d)
+
+    if m.n_shared:
+        out = out + mlp(cfg, p["shared"], x)
+    return out, aux

@@ -1,0 +1,332 @@
+"""State-space blocks: Mamba2 (SSD, Zamba2's workhorse) and RWKV-6 (Finch).
+
+Both are implemented as exact per-token recurrences via ``lax.scan`` for
+training/prefill, plus O(1)-state single-token decode steps.  A chunked
+(parallel) Mamba2 scan is a recorded perf-iteration candidate; the recurrent
+form is the correctness oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (simplified SSD: per-head scalar decay, diagonal A)
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def init_mamba2(cfg, key) -> dict:
+    s = cfg.ssm
+    d_inner, n_heads = mamba2_dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    # separate projections (vs the reference's packed in_proj) so each output
+    # dim can carry its own sharding without slicing a sharded axis
+    return {
+        "w_z": dense_init(ks[0], cfg.d_model, d_inner, dt),
+        "w_x": dense_init(ks[1], cfg.d_model, d_inner, dt),
+        "w_b": dense_init(ks[2], cfg.d_model, s.d_state, dt),
+        "w_c": dense_init(ks[3], cfg.d_model, s.d_state, dt),
+        "w_dt": dense_init(ks[4], cfg.d_model, n_heads, dt),
+        "conv_w": (jax.random.normal(ks[5], (s.d_conv, d_inner), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),     # A = -exp(a_log)
+        "dt_bias": jnp.full((n_heads,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "w_out": dense_init(ks[6], d_inner, cfg.d_model, dt),
+    }
+
+
+def _mamba2_core(cfg, p, xbc: jnp.ndarray, z: jnp.ndarray, b: jnp.ndarray,
+                 c: jnp.ndarray, dtv: jnp.ndarray,
+                 h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Recurrent SSD over time.  xbc [B,S,d_inner] (post-conv), b/c
+    [B,S,N], dtv [B,S,H]; h0 [B,H,hd,N] -> (y [B,S,d_inner], hT)."""
+    s = cfg.ssm
+    d_inner, H = mamba2_dims(cfg)
+    hd = s.head_dim
+    B_, S, _ = xbc.shape
+    a = -jnp.exp(p["a_log"])                              # [H]
+    dt_act = jax.nn.softplus(dtv + p["dt_bias"])          # [B,S,H]
+    xh = xbc.reshape(B_, S, H, hd)
+
+    def step(h, inp):
+        xt, bt, ct, dtt = inp                             # [B,H,hd],[B,N],[B,N],[B,H]
+        decay = jnp.exp(dtt * a)                          # [B,H]
+        dx = dtt[..., None] * xt                          # [B,H,hd]
+        h = h * decay[..., None, None] + dx[..., None] * bt[:, None, None, :]
+        y = jnp.einsum("bhdn,bn->bhd", h, ct)
+        return h, y
+
+    xs = (xh.transpose(1, 0, 2, 3), b.transpose(1, 0, 2),
+          c.transpose(1, 0, 2), dt_act.transpose(1, 0, 2))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3)                          # [B,S,H,hd]
+    y = y + p["d_skip"][None, None, :, None] * xh
+    return y.reshape(B_, S, d_inner).astype(xbc.dtype), hT
+
+
+def _mamba2_split(cfg, p, x):
+    z = x @ p["w_z"]
+    xi = x @ p["w_x"]
+    b = (x @ p["w_b"]).astype(jnp.float32)
+    c = (x @ p["w_c"]).astype(jnp.float32)
+    dtv = (x @ p["w_dt"]).astype(jnp.float32)
+    return z, xi, b, c, dtv
+
+
+def _mamba2_chunked(cfg, p, xbc, b, c, dtv, h0, chunk: int):
+    """Chunk-parallel SSD: per-head scalar decays make the pairwise ratio
+    matrix [C, C] per head — one state IO per chunk instead of per token."""
+    s = cfg.ssm
+    d_inner, H = mamba2_dims(cfg)
+    hd = s.head_dim
+    B_, S, _ = xbc.shape
+    a = -jnp.exp(p["a_log"])                                # [H]
+    dt_act = jax.nn.softplus(dtv + p["dt_bias"])            # [B,S,H]
+    xh = xbc.reshape(B_, S, H, hd).astype(jnp.float32)
+
+    C = chunk
+    pad = (-S) % C
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt_act = jnp.pad(dt_act, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // C
+    xs = (xh.reshape(B_, nc, C, H, hd).transpose(1, 0, 2, 3, 4),
+          b.reshape(B_, nc, C, -1).transpose(1, 0, 2, 3),
+          c.reshape(B_, nc, C, -1).transpose(1, 0, 2, 3),
+          dt_act.reshape(B_, nc, C, H).transpose(1, 0, 2, 3))
+    tri = jnp.tril(jnp.ones((C, C), jnp.float32))           # inclusive
+
+    def chunk_step(h, inp):
+        xb, bb, cb, dtb = inp              # [B,C,H,hd],[B,C,N],[B,C,N],[B,C,H]
+        lam = dtb * a                                       # [B,C,H] (<=0)
+        A = jnp.cumsum(lam, axis=1)                         # inclusive
+        # scores[t,u] = (C_t . B_u) e^{A_t - A_u} dt_u  (u <= t)
+        ratio = jnp.exp(jnp.clip(A[:, :, None] - A[:, None], -60.0, 0.0))
+        cb_dot_bu = jnp.einsum("btn,bun->btu", cb, bb)      # [B,C,C]
+        scores = cb_dot_bu[:, None] * ratio.transpose(0, 3, 1, 2) \
+            * dtb.transpose(0, 2, 1)[:, :, None, :]         # [B,H,C,C]
+        scores = scores * tri[None, None]
+        intra = jnp.einsum("bhtu,buhd->bthd", scores, xb)
+        inter = jnp.exp(A)[..., None] * jnp.einsum(
+            "btn,bhdn->bthd", cb, h).transpose(0, 1, 2, 3)
+        # state: h_C = e^{A_C} h0 + sum_u e^{A_C - A_u} dt_u x_u (x) B_u
+        Ac = A[:, -1]                                       # [B,H]
+        wgt = jnp.exp(jnp.clip(Ac[:, None] - A, -60.0, 0.0)) \
+            * dtb                                           # [B,C,H]
+        h1 = jnp.exp(Ac)[..., None, None] * h + jnp.einsum(
+            "buh,buhd,bun->bhdn", wgt, xb, bb)
+        return h1, intra + inter
+
+    hT, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, xs)
+    ys = ys.transpose(1, 0, 2, 3, 4).reshape(B_, S + pad, H, hd)[:, :S]
+    ys = ys + p["d_skip"][None, None, :, None] * xh[:, :S]
+    return ys.reshape(B_, S, d_inner).astype(xbc.dtype), hT
+
+
+def mamba2_full(cfg, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Train/prefill path.  x [B,S,d] -> [B,S,d]."""
+    s = cfg.ssm
+    d_inner, H = mamba2_dims(cfg)
+    B_, S, _ = x.shape
+    z, xi, b, c, dtv = _mamba2_split(cfg, p, x)
+    # causal depthwise conv over time
+    pad = jnp.pad(xi, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    xconv = sum(pad[:, i:i + S, :] * p["conv_w"][i][None, None, :]
+                for i in range(s.d_conv))
+    xbc = jax.nn.silu(xconv + p["conv_b"])
+    h0 = jnp.zeros((B_, H, s.head_dim, s.d_state), jnp.float32)
+    if s.chunk:
+        y, _ = _mamba2_chunked(cfg, p, xbc, b, c, dtv, h0, s.chunk)
+    else:
+        y, _ = _mamba2_core(cfg, p, xbc, z, b, c, dtv, h0)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"]
+
+
+def mamba2_state_init(cfg, batch: int) -> dict:
+    s = cfg.ssm
+    d_inner, H = mamba2_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_inner), jnp.dtype(cfg.dtype)),
+    }
+
+
+def mamba2_decode(cfg, p: dict, x: jnp.ndarray,
+                  state: dict) -> Tuple[jnp.ndarray, dict]:
+    """One token.  x [B,1,d]."""
+    s = cfg.ssm
+    d_inner, H = mamba2_dims(cfg)
+    B_ = x.shape[0]
+    z, xi, b, c, dtv = _mamba2_split(cfg, p, x)
+    hist = jnp.concatenate([state["conv"], xi], axis=1)   # [B,d_conv,din]
+    xconv = jnp.einsum("bkd,kd->bd", hist, p["conv_w"])[:, None, :]
+    xbc = jax.nn.silu(xconv + p["conv_b"])
+    y, hT = _mamba2_core(cfg, p, xbc, z, b, c, dtv, state["h"])
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"], {"h": hT, "conv": hist[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+
+def rwkv6_dims(cfg):
+    hd = cfg.ssm.head_dim
+    return cfg.d_model // hd, hd          # (n_heads, head_dim)
+
+
+def init_rwkv6(cfg, key) -> dict:
+    d = cfg.d_model
+    H, hd = rwkv6_dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_r": dense_init(ks[0], d, d, dt),
+        "w_k": dense_init(ks[1], d, d, dt),
+        "w_v": dense_init(ks[2], d, d, dt),
+        "w_g": dense_init(ks[3], d, d, dt),
+        "w_decay": dense_init(ks[4], d, d, dt),   # data-dependent decay proj
+        "decay_bias": jnp.full((d,), -4.0, jnp.float32),
+        "u_bonus": jnp.zeros((H, hd), jnp.float32),
+        "w_out": dense_init(ks[5], d, d, dt),
+        "ln_w": jnp.ones((d,), dt),               # per-head group norm scale
+        # channel-mix
+        "cm_k": dense_init(ks[6], d, cfg.d_ff, dt),
+        "cm_v": dense_init(ks[7], cfg.d_ff, d, dt),
+    }
+
+
+def _rwkv6_core(cfg, p, r, k, v, w, s0):
+    """Linear-attention recurrence.
+    r,k,v [B,S,H,hd]; w (decay in (0,1)) [B,S,H,hd]; s0 [B,H,hd,hd]."""
+    u = p["u_bonus"]                                       # [H,hd]
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                               # [B,H,hd] each
+        kv = kt[..., :, None] * vt[..., None, :]           # [B,H,hd,hd]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), sT                    # [B,S,H,hd]
+
+
+def _rwkv6_proj(cfg, p, x):
+    H, hd = rwkv6_dims(cfg)
+    B_, S, d = x.shape
+    f32 = jnp.float32
+    r = (x @ p["w_r"]).reshape(B_, S, H, hd).astype(f32)
+    k = (x @ p["w_k"]).reshape(B_, S, H, hd).astype(f32)
+    v = (x @ p["w_v"]).reshape(B_, S, H, hd).astype(f32)
+    g = jax.nn.silu(x @ p["w_g"])
+    decay = jnp.exp(-jnp.exp((x @ p["w_decay"]).astype(f32)
+                             + p["decay_bias"]))
+    w = decay.reshape(B_, S, H, hd)
+    return r, k, v, g, w
+
+
+def _rwkv6_out(cfg, p, ys, g):
+    B_, S, H_hd = ys.shape[0], ys.shape[1], ys.shape[2] * ys.shape[3]
+    y = ys.reshape(B_, S, H_hd)
+    # group-norm per head approximated by rmsnorm over the full dim
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-6)
+    y = (y * p["ln_w"].astype(jnp.float32)).astype(g.dtype)
+    return (y * g) @ p["w_out"]
+
+
+def _rwkv6_chunked(cfg, p, r, k, v, w, s0, chunk: int):
+    """Chunk-parallel RWKV-6 (GLA-style): per-token state IO becomes one
+    state read/write per chunk; intra-chunk interactions are masked matmuls
+    with pairwise decay ratios exp(L_{t-1} - L_u) <= 1 (always safe — decay
+    only accumulates).  Exact (up to fp) vs the per-token recurrence."""
+    B_, S, H, hd = r.shape
+    C = chunk
+    pad = (-S) % C
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    nc = (S + pad) // C
+    u = p["u_bonus"]                                        # [H,hd]
+
+    def reshape(t):
+        return t.reshape(B_, nc, C, H, hd).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, wc = map(reshape, (r, k, v, w))             # [nc,B,C,H,hd]
+
+    tri = jnp.tril(jnp.ones((C, C), jnp.float32), k=-1)     # strict lower
+
+    def chunk_step(s, inp):
+        rb, kb, vb, wb = inp                                # [B,C,H,hd]
+        logw = jnp.log(jnp.maximum(wb, 1e-30))
+        L = jnp.cumsum(logw, axis=1)                        # L_t (inclusive)
+        Lm1 = L - logw                                      # L_{t-1}
+        # intra-chunk: A[t,u] = sum_d r_t k_u exp(L_{t-1}-L_u), u < t
+        ex = jnp.exp(jnp.clip(Lm1[:, :, None] - L[:, None], -60.0, 0.0))
+        scores = jnp.einsum("bthd,buhd,btuhd->bhtu", rb, kb, ex)
+        scores = scores * tri[None, None]
+        intra = jnp.einsum("bhtu,buhd->bthd", scores, vb)
+        # diagonal bonus term
+        diag = jnp.einsum("bthd,bthd->bth", rb * u[None, None], kb)
+        intra = intra + diag[..., None] * vb
+        # inter-chunk: r~_t . S0
+        inter = jnp.einsum("bthk,bhkv->bthv", rb * jnp.exp(Lm1), s)
+        # state update: S1 = diag(exp(L_C)) S0 + sum_u (k_u exp(L_C-L_u))v_u
+        Lc = L[:, -1]                                       # [B,H,hd]
+        kk = kb * jnp.exp(jnp.clip(Lc[:, None] - L, -60.0, 0.0))
+        s1 = jnp.exp(Lc)[..., None] * s + jnp.einsum(
+            "buhk,buhv->bhkv", kk, vb)
+        return s1, intra + inter
+
+    sT, ys = jax.lax.scan(jax.checkpoint(chunk_step), s0, (rc, kc, vc, wc))
+    ys = ys.transpose(1, 0, 2, 3, 4).reshape(B_, S + pad, H, hd)
+    return ys[:, :S], sT
+
+
+def rwkv6_time_mix(cfg, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    H, hd = rwkv6_dims(cfg)
+    B_ = x.shape[0]
+    r, k, v, g, w = _rwkv6_proj(cfg, p, x)
+    s0 = jnp.zeros((B_, H, hd, hd), jnp.float32)
+    if cfg.ssm.chunk:
+        ys, _ = _rwkv6_chunked(cfg, p, r, k, v, w, s0, cfg.ssm.chunk)
+    else:
+        ys, _ = _rwkv6_core(cfg, p, r, k, v, w, s0)
+    return _rwkv6_out(cfg, p, ys, g)
+
+
+def rwkv6_state_init(cfg, batch: int) -> dict:
+    H, hd = rwkv6_dims(cfg)
+    return {"s": jnp.zeros((batch, H, hd, hd), jnp.float32)}
+
+
+def rwkv6_decode(cfg, p: dict, x: jnp.ndarray,
+                 state: dict) -> Tuple[jnp.ndarray, dict]:
+    r, k, v, g, w = _rwkv6_proj(cfg, p, x)
+    ys, sT = _rwkv6_core(cfg, p, r, k, v, w, state["s"])
+    return _rwkv6_out(cfg, p, ys, g), {"s": sT}
+
+
+def rwkv6_channel_mix(cfg, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.square(jax.nn.relu(x @ p["cm_k"]))
+    return h @ p["cm_v"]

@@ -1,0 +1,496 @@
+"""Model assembly for all assigned architectures.
+
+One functional `Model` facade with three entry points:
+
+  * ``loss(params, batch)``            — training forward (next-token CE)
+  * ``prefill(params, batch)``         — full forward returning logits
+  * ``decode_step(params, cache, tok, t)`` — one token with KV/state cache
+
+Layer stacks are scanned (``lax.scan`` over stacked params) for compact HLO;
+heterogeneous patterns (DeepSeek first dense layer, Zamba2 shared-attention
+interleave, Whisper enc/dec) are composed from scanned homogeneous chunks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import ffn as F
+from . import ssm as S
+from .common import (apply_norm, cross_entropy, dense_init, embed_init,
+                     norm_params, sinusoidal_pos, sinusoidal_pos_at)
+from repro.runtime.shard_ctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# Block-level init/apply
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(cfg, key) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    attn = A.init_mla(cfg, k1) if cfg.mla else A.init_attn(cfg, k1)
+    return {"ln1": norm_params(cfg, k3, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "attn": attn,
+            "ln2": norm_params(cfg, k4, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "mlp": F.init_mlp(cfg, k2)}
+
+
+def _init_moe_block(cfg, key) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    attn = A.init_mla(cfg, k1) if cfg.mla else A.init_attn(cfg, k1)
+    return {"ln1": norm_params(cfg, k3, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "attn": attn,
+            "ln2": norm_params(cfg, k4, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "moe": F.init_moe(cfg, k2)}
+
+
+def _init_mamba_block(cfg, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"ln": norm_params(cfg, k2, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "mamba": S.init_mamba2(cfg, k1)}
+
+
+def _init_rwkv_block(cfg, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": norm_params(cfg, k2, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "ln2": norm_params(cfg, k3, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "tmix": S.init_rwkv6(cfg, k1)}
+
+
+def _init_enc_block(cfg, key) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"ln1": norm_params(cfg, k3, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "attn": A.init_attn(cfg, k1),
+            "ln2": norm_params(cfg, k4, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "mlp": F.init_mlp(cfg, k2)}
+
+
+def _init_dec_block(cfg, key) -> dict:
+    ks = jax.random.split(key, 6)
+    return {"ln1": norm_params(cfg, ks[0], cfg.d_model, jnp.dtype(cfg.dtype)),
+            "attn": A.init_attn(cfg, ks[1]),
+            "ln_x": norm_params(cfg, ks[2], cfg.d_model, jnp.dtype(cfg.dtype)),
+            "xattn": A.init_cross_attn(cfg, ks[3]),
+            "ln2": norm_params(cfg, ks[4], cfg.d_model, jnp.dtype(cfg.dtype)),
+            "mlp": F.init_mlp(cfg, ks[5])}
+
+
+def _attn_full(cfg, p, h, pos, pos3, window):
+    if cfg.mla:
+        return A.mla_full(cfg, p, h, pos=pos, window=window)
+    return A.gqa_full(cfg, p, h, causal=True, pos=pos, pos3=pos3,
+                      window=window)
+
+
+def _dense_block(cfg, p, x, pos, pos3, window):
+    h = apply_norm(cfg, x, p["ln1"])
+    x = x + _attn_full(cfg, p["attn"], h, pos, pos3, window)
+    h = apply_norm(cfg, x, p["ln2"])
+    return x + F.mlp(cfg, p["mlp"], h)
+
+
+def _moe_block(cfg, p, x, pos, pos3, window):
+    h = apply_norm(cfg, x, p["ln1"])
+    x = x + _attn_full(cfg, p["attn"], h, pos, pos3, window)
+    h = apply_norm(cfg, x, p["ln2"])
+    out, aux = F.moe(cfg, p["moe"], h)
+    return x + out, aux
+
+
+def _mamba_block(cfg, p, x):
+    return x + S.mamba2_full(cfg, p["mamba"], apply_norm(cfg, x, p["ln"]))
+
+
+def _rwkv_block(cfg, p, x):
+    x = x + S.rwkv6_time_mix(cfg, p["tmix"], apply_norm(cfg, x, p["ln1"]))
+    return x + S.rwkv6_channel_mix(cfg, p["tmix"],
+                                   apply_norm(cfg, x, p["ln2"]))
+
+
+# ---------------------------------------------------------------------------
+# Stacking helpers
+# ---------------------------------------------------------------------------
+
+def _stack_init(init_fn, cfg, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(cfg, k))(keys)
+
+
+def _scan_blocks(body, x, stacked, remat: bool):
+    def wrapped(c, p):
+        c = constrain(c)          # FCO T-boundary: activation re-layout point
+        return body(c, p)
+    fn = jax.checkpoint(wrapped) if remat else wrapped
+    x, aux = jax.lax.scan(lambda c, p: fn(c, p), x, stacked)
+    return constrain(x), aux
+
+
+# ---------------------------------------------------------------------------
+# Model facade
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+
+    # ---------------- init ----------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, 8)
+        params: Dict[str, Any] = {
+            "tok_emb": embed_init(ks[0], cfg.vocab, cfg.d_model, dt),
+            "final_norm": norm_params(cfg, ks[1], cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab, dt)
+
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            params["blocks"] = _stack_init(_init_dense_block, cfg, ks[3],
+                                           cfg.n_layers)
+        elif fam == "moe":
+            m = cfg.moe
+            if m.first_dense:
+                dense_cfg = dataclasses.replace(cfg, d_ff=m.d_ff_dense
+                                                or cfg.d_ff)
+                params["first_blocks"] = _stack_init(
+                    _init_dense_block, dense_cfg, ks[4], m.first_dense)
+            params["blocks"] = _stack_init(_init_moe_block, cfg, ks[3],
+                                           cfg.n_layers - m.first_dense)
+        elif fam == "ssm":
+            params["blocks"] = _stack_init(_init_rwkv_block, cfg, ks[3],
+                                           cfg.n_layers)
+        elif fam == "hybrid":
+            params["blocks"] = _stack_init(_init_mamba_block, cfg, ks[3],
+                                           cfg.n_layers)
+            params["shared_attn"] = _init_dense_block(cfg, ks[5])
+        elif fam == "encdec":
+            params["enc_blocks"] = _stack_init(_init_enc_block, cfg, ks[3],
+                                               cfg.n_enc_layers)
+            params["blocks"] = _stack_init(_init_dec_block, cfg, ks[4],
+                                           cfg.n_layers)
+            params["enc_norm"] = norm_params(cfg, ks[6], cfg.d_model, dt)
+        else:
+            raise ValueError(fam)
+        return params
+
+    # ---------------- shared pieces ----------------
+    def _embed(self, params, tokens):
+        return params["tok_emb"][tokens]
+
+    def _logits(self, params, x):
+        x = apply_norm(self.cfg, x, params["final_norm"])
+        if self.cfg.tie_embeddings:
+            return x @ params["tok_emb"].T
+        return x @ params["lm_head"]
+
+    def _positions(self, batch) -> Tuple[Optional[jnp.ndarray],
+                                         Optional[jnp.ndarray]]:
+        """(pos [B,S], pos3 [B,3,S]) for the decoder stream."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, Stx = tokens.shape
+        if cfg.family == "vlm":
+            nv = cfg.vision_tokens
+            side = max(1, int(math.sqrt(nv)))
+            t_v = jnp.zeros((nv,), jnp.int32)
+            hcoord = (jnp.arange(nv) // side).astype(jnp.int32)
+            wcoord = (jnp.arange(nv) % side).astype(jnp.int32)
+            t_t = jnp.arange(Stx, dtype=jnp.int32) + 1
+            pos3 = jnp.stack([
+                jnp.concatenate([t_v, t_t]),
+                jnp.concatenate([hcoord, t_t]),
+                jnp.concatenate([wcoord, t_t]),
+            ])                                            # [3, nv+Stx]
+            pos3 = jnp.broadcast_to(pos3[None], (B, 3, nv + Stx))
+            return None, pos3
+        pos = jnp.broadcast_to(jnp.arange(Stx, dtype=jnp.int32)[None],
+                               (B, Stx))
+        return pos, None
+
+    # ---------------- full forward ----------------
+    def forward(self, params, batch, *, remat: bool = False) -> Tuple[
+            jnp.ndarray, jnp.ndarray]:
+        """Returns (logits over the decoder stream, aux loss)."""
+        cfg = self.cfg
+        window = cfg.attn_window
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        aux = jnp.zeros((), jnp.float32)
+
+        if cfg.family == "vlm":
+            x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype), x],
+                                axis=1)
+        pos, pos3 = self._positions(batch)
+
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            def body(h, p):
+                return _dense_block(cfg, p, h, pos, pos3, window), 0.0
+            x, _ = _scan_blocks(body, x, params["blocks"], remat)
+        elif fam == "moe":
+            if "first_blocks" in params:
+                dcfg = dataclasses.replace(cfg, d_ff=cfg.moe.d_ff_dense
+                                           or cfg.d_ff)
+                def dbody(h, p):
+                    return _dense_block(dcfg, p, h, pos, pos3, window), 0.0
+                x, _ = _scan_blocks(dbody, x, params["first_blocks"], remat)
+            def mbody(h, p):
+                h, a = _moe_block(cfg, p, h, pos, pos3, window)
+                return h, a
+            x, auxs = _scan_blocks(mbody, x, params["blocks"], remat)
+            aux = aux + auxs.sum()
+        elif fam == "ssm":
+            def body(h, p):
+                return _rwkv_block(cfg, p, h), 0.0
+            x, _ = _scan_blocks(body, x, params["blocks"], remat)
+        elif fam == "hybrid":
+            x = self._hybrid_forward(params, x, pos, window, remat)
+        elif fam == "encdec":
+            x = self._encdec_forward(params, batch, x, pos, window, remat)
+        else:
+            raise ValueError(fam)
+
+        logits = self._logits(params, x)
+        if fam == "vlm":
+            logits = logits[:, cfg.vision_tokens:, :]
+        return logits, aux
+
+    def _hybrid_forward(self, params, x, pos, window, remat):
+        """Zamba2: scan chunks of mamba blocks, shared attn block between."""
+        cfg = self.cfg
+        every = cfg.hybrid_attn_every or cfg.n_layers
+        n = cfg.n_layers
+        off = 0
+        while off < n:
+            size = min(every, n - off)
+            chunk = jax.tree.map(lambda a: a[off:off + size], params["blocks"])
+            def body(h, p):
+                return _mamba_block(cfg, p, h), 0.0
+            x, _ = _scan_blocks(body, x, chunk, remat)
+            x = _dense_block(cfg, params["shared_attn"], x, pos, None, window)
+            off += size
+        return x
+
+    def encode(self, params, audio_embeds, *, remat: bool = False):
+        """Whisper encoder over stub frame embeddings -> [B, enc_seq, d]."""
+        cfg = self.cfg
+        enc = audio_embeds.astype(jnp.dtype(cfg.dtype))
+        enc = enc + sinusoidal_pos(enc.shape[1], cfg.d_model).astype(enc.dtype)
+
+        def ebody(h, p):
+            hh = apply_norm(cfg, h, p["ln1"])
+            h = h + A.gqa_full(cfg, p["attn"], hh, causal=False)
+            hh = apply_norm(cfg, h, p["ln2"])
+            return h + F.mlp(cfg, p["mlp"], hh), 0.0
+        enc, _ = _scan_blocks(ebody, enc, params["enc_blocks"], remat)
+        return apply_norm(cfg, enc, params["enc_norm"])
+
+    def _encdec_forward(self, params, batch, x, pos, window, remat):
+        cfg = self.cfg
+        enc = self.encode(params, batch["audio_embeds"], remat=remat)
+        x = x + sinusoidal_pos(x.shape[1], cfg.d_model).astype(x.dtype)
+
+        def dbody(h, p):
+            hh = apply_norm(cfg, h, p["ln1"])
+            h = h + A.gqa_full(cfg, p["attn"], hh, causal=True, window=window)
+            hh = apply_norm(cfg, h, p["ln_x"])
+            h = h + A.gqa_full(cfg, p["xattn"], hh, causal=False, kv_x=enc)
+            hh = apply_norm(cfg, h, p["ln2"])
+            return h + F.mlp(cfg, p["mlp"], hh), 0.0
+        x, _ = _scan_blocks(dbody, x, params["blocks"], remat)
+        return x
+
+    # ---------------- loss ----------------
+    def loss(self, params, batch, *, remat: bool = True) -> jnp.ndarray:
+        logits, aux = self.forward(params, batch, remat=remat)
+        labels = batch["labels"]
+        return cross_entropy(logits, labels) + aux
+
+    # ---------------- decode ----------------
+    def cache_init(self, batch: int, capacity: int) -> Dict[str, Any]:
+        """Per-layer cache pages (a list, not a stacked array): the decode
+        loop is unrolled so each layer performs exactly one in-place
+        dynamic-update-slice — scanned stacks would copy the whole cache in
+        and out of the loop carry every layer."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        fam = cfg.family
+
+        def pages(fn, n):
+            return [fn() for _ in range(n)]
+
+        if fam in ("dense", "vlm", "moe"):
+            mk = (lambda: A.mla_cache_init(cfg, batch, capacity, dt)) \
+                if cfg.mla else \
+                (lambda: A.gqa_cache_init(cfg, batch, capacity, dt))
+            out = {"layers": pages(mk, cfg.n_layers - (
+                cfg.moe.first_dense if cfg.moe else 0))}
+            if cfg.moe and cfg.moe.first_dense:
+                out["first_layers"] = pages(mk, cfg.moe.first_dense)
+            return out
+        if fam == "ssm":
+            return {"layers": pages(
+                lambda: S.rwkv6_state_init(cfg, batch), cfg.n_layers)}
+        if fam == "hybrid":
+            n_attn = -(-cfg.n_layers // (cfg.hybrid_attn_every
+                                         or cfg.n_layers))
+            return {
+                "layers": pages(lambda: S.mamba2_state_init(cfg, batch),
+                                cfg.n_layers),
+                "attn_layers": pages(
+                    lambda: A.gqa_cache_init(cfg, batch, capacity, dt),
+                    n_attn),
+            }
+        if fam == "encdec":
+            return {
+                "layers": pages(
+                    lambda: A.gqa_cache_init(cfg, batch, capacity, dt),
+                    cfg.n_layers),
+                # cross-attn K/V cached once at prefill (recomputing them
+                # from enc_out per decode token dominated whisper's memory
+                # roofline term — §Perf E)
+                "xlayers": pages(
+                    lambda: {"xk": jnp.zeros((batch, cfg.n_kv, cfg.enc_seq,
+                                              cfg.hd), dt),
+                             "xv": jnp.zeros((batch, cfg.n_kv, cfg.enc_seq,
+                                              cfg.hd), dt)},
+                    cfg.n_layers),
+            }
+        raise ValueError(fam)
+
+    def encode_cross(self, params, audio_embeds):
+        """Whisper serve-time prefill: encoder forward + per-layer cross
+        K/V cache pages (fills ``cache['xlayers']``)."""
+        enc = self.encode(params, audio_embeds)
+        out = []
+        for i in range(self.cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["blocks"])
+            xk, xv = A.cross_kv(self.cfg, p["xattn"], enc)
+            out.append({"xk": xk, "xv": xv})
+        return out
+
+    def decode_step(self, params, cache, tok, t) -> Tuple[jnp.ndarray,
+                                                          Dict[str, Any]]:
+        """tok [B,1] int32; t scalar int32 position.  Returns (logits [B,1,V],
+        new cache)."""
+        cfg = self.cfg
+        window = cfg.attn_window
+        x = self._embed(params, tok)
+        fam = cfg.family
+        new_cache = dict(cache)
+
+        if fam in ("dense", "vlm", "moe"):
+            # decode MoE is drop-free: groups = batch rows with one token
+            # each, so per-(group, expert) capacity 1 suffices exactly
+            decode_cap = 1
+            rope_pos = t + 1 if fam == "vlm" else t
+
+            def body(h, p, c):
+                hh = apply_norm(cfg, h, p["ln1"])
+                if cfg.mla:
+                    a, c2 = A.mla_decode(cfg, p["attn"], hh, c, t,
+                                         rope_pos=rope_pos)
+                else:
+                    a, c2 = A.gqa_decode(cfg, p["attn"], hh, c, t,
+                                         rope_pos=rope_pos)
+                h = h + a
+                hh = apply_norm(cfg, h, p["ln2"])
+                if "moe" in p:
+                    out, _ = F.moe(cfg, p["moe"], hh, capacity=decode_cap)
+                    h = h + out
+                else:
+                    h = h + F.mlp(cfg, p["mlp"], hh)
+                return h, c2
+            if fam == "moe" and "first_blocks" in params:
+                fcs = []
+                for i, c in enumerate(cache["first_layers"]):
+                    p = jax.tree.map(lambda a: a[i], params["first_blocks"])
+                    x, c2 = body(x, p, c)
+                    fcs.append(c2)
+                new_cache["first_layers"] = fcs
+            lcs = []
+            for i, c in enumerate(cache["layers"]):
+                p = jax.tree.map(lambda a: a[i], params["blocks"])
+                x, c2 = body(x, p, c)
+                lcs.append(c2)
+            new_cache["layers"] = lcs
+        elif fam == "ssm":
+            lcs = []
+            for i, c in enumerate(cache["layers"]):
+                p = jax.tree.map(lambda a: a[i], params["blocks"])
+                a, c2 = S.rwkv6_decode(cfg, p["tmix"],
+                                       apply_norm(cfg, x, p["ln1"]), c)
+                x = x + a
+                x = x + S.rwkv6_channel_mix(
+                    cfg, p["tmix"], apply_norm(cfg, x, p["ln2"]))
+                lcs.append(c2)
+            new_cache["layers"] = lcs
+        elif fam == "hybrid":
+            x, new_cache = self._hybrid_decode(params, cache, x, t)
+        elif fam == "encdec":
+            x, new_cache = self._encdec_decode(params, cache, x, t)
+        else:
+            raise ValueError(fam)
+        return self._logits(params, x), new_cache
+
+    def _hybrid_decode(self, params, cache, x, t):
+        cfg = self.cfg
+        every = cfg.hybrid_attn_every or cfg.n_layers
+        n = cfg.n_layers
+        new_cache = dict(cache)
+        new_m, new_a = [], []
+        ai = 0
+        for i in range(n):
+            p = jax.tree.map(lambda a: a[i], params["blocks"])
+            a_out, c2 = S.mamba2_decode(cfg, p["mamba"],
+                                        apply_norm(cfg, x, p["ln"]),
+                                        cache["layers"][i])
+            x = x + a_out
+            new_m.append(c2)
+            if (i + 1) % every == 0 or i == n - 1:
+                pa = params["shared_attn"]
+                hh = apply_norm(cfg, x, pa["ln1"])
+                a2, ac2 = A.gqa_decode(cfg, pa["attn"], hh,
+                                       cache["attn_layers"][ai], t)
+                x = x + a2
+                hh = apply_norm(cfg, x, pa["ln2"])
+                x = x + F.mlp(cfg, pa["mlp"], hh)
+                new_a.append(ac2)
+                ai += 1
+        new_cache["layers"] = new_m
+        new_cache["attn_layers"] = new_a
+        return x, new_cache
+
+    def _encdec_decode(self, params, cache, x, t):
+        cfg = self.cfg
+        x = x + sinusoidal_pos_at(t, cfg.d_model).astype(x.dtype)[None, None]
+        lcs = []
+        for i, c in enumerate(cache["layers"]):
+            p = jax.tree.map(lambda a: a[i], params["blocks"])
+            xc = cache["xlayers"][i]
+            hh = apply_norm(cfg, x, p["ln1"])
+            a, c2 = A.gqa_decode(cfg, p["attn"], hh, c, t)
+            x = x + a
+            hh = apply_norm(cfg, x, p["ln_x"])
+            x = x + A.gqa_cross_cached(cfg, p["xattn"], hh, xc["xk"],
+                                       xc["xv"])
+            hh = apply_norm(cfg, x, p["ln2"])
+            x = x + F.mlp(cfg, p["mlp"], hh)
+            lcs.append(c2)
+        new_cache = dict(cache)
+        new_cache["layers"] = lcs
+        return x, new_cache
+
+    # prefill = forward returning logits (cache prefill is exercised via
+    # decode-from-scratch in tests; production serving lowers decode_step)
+    def prefill(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        return logits

@@ -1,0 +1,72 @@
+"""Activation-sharding context: the TPU analogue of FlexPie's T boundaries.
+
+Model code stays sharding-agnostic; the launcher installs a constraint
+callback for the duration of tracing, and blocks call :func:`constrain` at
+their boundaries.  Sequence-sharded activations (the InH scheme) vs
+batch-only sharding (leaving the model axis to weights, the OutC scheme) is
+exactly the per-class decision the FCO planner makes.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACT_FN: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_act_fn", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(fn: Optional[Callable]):
+    tok = _ACT_FN.set(fn)
+    try:
+        yield
+    finally:
+        _ACT_FN.reset(tok)
+
+
+def constrain(x):
+    fn = _ACT_FN.get()
+    return fn(x) if fn is not None else x
+
+
+def seq_shard_fn(mesh: Mesh, dp_axes, *, seq_axis: str = "model"):
+    """Constraint callback: [B, S, d] -> B over data axes, S over ``model``
+    when divisible (best-effort; skips non-conforming streams)."""
+    dpn = 1
+    for a in dp_axes:
+        dpn *= mesh.shape[a]
+    m = mesh.shape[seq_axis]
+
+    def fn(x):
+        if x.ndim != 3:
+            return x
+        b, s, _ = x.shape
+        spec = [None, None, None]
+        if b % dpn == 0 and b > 1:
+            spec[0] = dp_axes
+        if s % m == 0 and s > 1:
+            spec[1] = seq_axis
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+    return fn
+
+
+def batch_shard_fn(mesh: Mesh, dp_axes):
+    """Constraint callback: batch over data axes only (TP-style)."""
+    dpn = 1
+    for a in dp_axes:
+        dpn *= mesh.shape[a]
+
+    def fn(x):
+        if x.ndim != 3:
+            return x
+        b = x.shape[0]
+        spec = [dp_axes if (b % dpn == 0 and b > 1) else None] \
+            + [None] * (x.ndim - 1)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+    return fn

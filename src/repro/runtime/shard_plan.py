@@ -1,0 +1,239 @@
+"""Sharding plans: FlexPie's scheme alphabet mapped onto the TPU mesh.
+
+The edge planner chooses (partition scheme, T/NT) per layer; here the same
+decision surfaces as a :class:`Strategy` per block-class:
+
+  * ``attn``: ``"tp"`` (shard head projections over ``model`` — the OutC
+    analogue) or ``"sp"`` (replicate weights, shard activations by sequence —
+    the InH analogue).
+  * ``ffn``:  ``"tp"`` or ``"sp"`` likewise for the MLP.
+  * ``moe``:  ``"ep"`` (experts over ``model`` — expert parallel) or
+    ``"tp"`` (expert FFN dim over ``model``).
+  * ``fsdp``: shard every weight over the data axes as well (ZeRO-3); the
+    per-layer weight all-gather is the T-mode re-layout of the TPU mapping.
+
+Every rule is divisibility-checked against the mesh; infeasible choices fall
+back (e.g. 40 heads on a 16-way model axis -> flattened-dim sharding or
+replication), mirroring the paper's observation that scheme feasibility
+depends on the layer/testbed pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    attn: str = "tp"        # tp | sp
+    ffn: str = "tp"         # tp | sp
+    moe: str = "ep"         # ep | tp
+    fsdp: bool = True
+    # decode: resident TP weights (no data-axis sharding) when the model fits
+    decode_resident: bool = False
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> bool:
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape)
+                                                         - len(spec))):
+        if axes is None:
+            continue
+        if dim % _axis_size(mesh, axes) != 0:
+            return False
+    return True
+
+
+def _pick(shape, mesh: Mesh, *candidates: P) -> P:
+    """First candidate whose named axes all divide; else fully replicated."""
+    for c in candidates:
+        if _fits(shape, c, mesh):
+            return c
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules
+# ---------------------------------------------------------------------------
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], mesh: Mesh, st: Strategy,
+               mode: str) -> P:
+    """Sharding rule for one parameter leaf.  ``path`` is a '/'-joined key
+    path; stacked block params carry a leading layer dim (detected by the
+    'blocks' path component) which is never sharded."""
+    stacked = "blocks" in path or "attn_layers" in path
+    rank = len(shape)
+    core = shape[1:] if stacked else shape
+    fsdp = data_axes(mesh) if (st.fsdp and not (mode != "train"
+                                                and st.decode_resident)) \
+        else None
+
+    def wrap(spec: P) -> P:
+        if stacked:
+            return P(None, *spec)
+        return spec
+
+    name = path.split("/")[-1]
+
+    # ---- scalars / vectors -------------------------------------------------
+    if len(core) == 1:
+        if name in ("bq", "bk", "bv") and st.attn == "tp":
+            return wrap(_pick(core, mesh, P("model")))
+        return wrap(P())
+
+    # ---- embeddings / heads -----------------------------------------------
+    if name == "tok_emb":
+        return _pick(core, mesh, P("model", fsdp), P(None, "model"), P())
+    if name == "lm_head":
+        return _pick(core, mesh, P(fsdp, "model"), P("model", None), P())
+
+    # ---- MoE ----------------------------------------------------------------
+    if name == "router":
+        return wrap(_pick(core, mesh, P(fsdp, None)))
+    if len(core) == 3 and name in ("w_gate", "w_up", "w_down"):
+        # expert weights [E, d, f] / [E, f, d]
+        if st.moe == "ep":
+            cand = [P("model", fsdp, None), P(None, fsdp, "model"),
+                    P(None, "model", fsdp)]
+        else:
+            cand = [P(None, fsdp, "model"), P(None, "model", fsdp),
+                    P("model", fsdp, None)]
+        return wrap(_pick(core, mesh, *cand))
+
+    # ---- MLA ----------------------------------------------------------------
+    if name in ("w_uk", "w_uv"):          # [H, a, b]
+        return wrap(_pick(core, mesh, P("model", None, None), P()))
+    if name in ("w_dq", "w_dkv", "w_kr"):
+        return wrap(_pick(core, mesh, P(fsdp, None)))
+    if name == "w_uq":
+        if st.attn == "tp":
+            return wrap(_pick(core, mesh, P(fsdp, "model"), P(fsdp, None)))
+        return wrap(_pick(core, mesh, P(fsdp, None)))
+
+    # ---- attention ----------------------------------------------------------
+    if name in ("wq", "wk", "wv"):
+        if st.attn == "tp":
+            return wrap(_pick(core, mesh, P(fsdp, "model"), P(fsdp, None)))
+        return wrap(_pick(core, mesh, P(fsdp, None)))
+    if name == "wo":
+        if st.attn == "tp":
+            return wrap(_pick(core, mesh, P("model", fsdp), P(None, fsdp)))
+        return wrap(_pick(core, mesh, P(None, fsdp)))
+
+    # ---- dense MLP / rwkv channel-mix ---------------------------------------
+    if name in ("w_gate", "w_up", "cm_k"):
+        if st.ffn == "tp":
+            return wrap(_pick(core, mesh, P(fsdp, "model"), P(fsdp, None)))
+        return wrap(_pick(core, mesh, P(fsdp, None)))
+    if name in ("w_down", "cm_v"):
+        if st.ffn == "tp":
+            return wrap(_pick(core, mesh, P("model", fsdp), P(None, fsdp)))
+        return wrap(_pick(core, mesh, P(None, fsdp)))
+    if name in ("b_up", "b_down"):
+        return wrap(P())
+
+    # ---- mamba2 / rwkv6 -----------------------------------------------------
+    if name in ("w_z", "w_x"):
+        return wrap(_pick(core, mesh, P(fsdp, "model"), P(fsdp, None)))
+    if name in ("w_b", "w_c", "w_dt"):
+        return wrap(_pick(core, mesh, P(fsdp, None)))
+    if name == "conv_w":
+        return wrap(_pick(core, mesh, P(None, "model"), P()))
+    if name in ("w_r", "w_k", "w_v", "w_g", "w_decay"):
+        return wrap(_pick(core, mesh, P(fsdp, "model"), P(fsdp, None)))
+    if name == "w_out":
+        return wrap(_pick(core, mesh, P("model", fsdp), P(None, fsdp)))
+
+    # ---- default: FSDP on dim 0 --------------------------------------------
+    if len(core) >= 2:
+        return wrap(_pick(core, mesh, P(fsdp, None), P()))
+    return wrap(P())
+
+
+def _paths_tree(tree) -> Any:
+    """pytree of '/'-joined path strings matching ``tree``'s structure."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    def pstr(kp):
+        parts = []
+        for p in kp:
+            parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        return "/".join(parts)
+    return treedef.unflatten([pstr(kp) for kp, _ in flat])
+
+
+def param_specs(params_shape, mesh: Mesh, st: Strategy,
+                mode: str = "train"):
+    paths = _paths_tree(params_shape)
+    return jax.tree.map(
+        lambda pth, leaf: _leaf_spec(pth, tuple(leaf.shape), mesh, st, mode),
+        paths, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / optimizer sharding
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_shape, mesh: Mesh) -> Any:
+    dp = data_axes(mesh)
+
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        if shape and shape[0] % _axis_size(mesh, dp) == 0:
+            return P(dp, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+    return jax.tree.map(spec, batch_shape)
+
+
+def cache_specs(cache_shape, mesh: Mesh, st: Strategy) -> Any:
+    """KV caches / SSM states (per-layer pages, batch-first): batch over the
+    data axes; the largest remaining divisible dim (kv-heads, sequence or
+    features) over ``model`` — flash-decode style sequence sharding falls
+    out naturally when kv-heads don't divide the model axis."""
+    dp = data_axes(mesh)
+    dpn = _axis_size(mesh, dp)
+    msize = mesh.shape["model"]
+
+    def spec(leaf) -> P:
+        shape = tuple(leaf.shape)
+        dims: list = [None] * len(shape)
+        if shape and shape[0] % dpn == 0 and shape[0] > 1:
+            dims[0] = dp
+        best, best_dim = 0, -1
+        for i in range(1, len(shape)):
+            if shape[i] % msize == 0 and shape[i] > best:
+                best, best_dim = shape[i], i
+        if best_dim >= 0:
+            dims[best_dim] = "model"
+        return P(*dims)
+
+    return jax.tree.map(spec, cache_shape)
+
+
+def opt_specs(param_spec_tree, params_shape) -> Dict[str, Any]:
+    """AdamW moments inherit their parameter's sharding; step is replicated."""
+    return {"m": param_spec_tree, "v": param_spec_tree, "step": P()}
+
+
+def named(tree_of_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,65 @@
+"""Step functions lowered by the launcher/dry-run: train / prefill / decode."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.optim import adamw_update, cosine_schedule
+
+
+def make_train_step(model: Model, *, peak_lr: float = 3e-4,
+                    warmup: int = 100, total: int = 10_000,
+                    accum: int = 1):
+    """``accum > 1`` runs gradient accumulation over microbatches (scan):
+    the global batch is split on its leading axis, cutting peak activation
+    memory ~accum x at the cost of serializing the microbatches — the
+    §Perf "fit" lever for pairs whose activations exceed HBM."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: model.loss(p, batch, remat=True))(params)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            # strided split (rows i::accum): every microbatch draws evenly
+            # from every data shard, so the per-micro sharding layout is
+            # identical to the full batch's
+            micro = jax.tree.map(
+                lambda a: a.reshape((a.shape[0] // accum, accum)
+                                    + a.shape[1:]).swapaxes(0, 1), batch)
+
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(params, mb)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, g_acc, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        lr = cosine_schedule(opt_state["step"], peak_lr=peak_lr,
+                             warmup=warmup, total=total)
+        params, opt_state = adamw_update(grads, opt_state, params, lr)
+        return params, opt_state, {"loss": loss, "lr": lr}
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tok, t):
+        return model.decode_step(params, cache, tok, t)
+    return decode_step

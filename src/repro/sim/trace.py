@@ -1,0 +1,125 @@
+"""Trace generation + estimator training (§3.2, "330K pieces of trace data").
+
+On the paper's testbed the traces are wall-clock measurements; here they are
+drawn from the analytic testbed physics (``core/cost.py``) with multiplicative
+log-normal measurement noise — the same role, no hardware.  The GBDT
+estimators are then trained on (features -> log seconds) pairs and plugged
+into DPP, giving the full data-driven FCO loop end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost import Testbed, Topology, compute_time_s, sync_time_s
+from repro.core.estimator import (GBDTEstimator, i_features, s_features)
+from repro.core.graph import ConvT, LayerSpec
+from repro.core.partition import ALL_SCHEMES, Scheme
+from repro.gbdt import GBDTRegressor
+
+
+@dataclasses.dataclass
+class TraceConfig:
+    n_samples: int = 330_000
+    noise_sigma: float = 0.05       # log-normal measurement noise
+    seed: int = 0
+    node_choices: Tuple[int, ...] = (3, 4, 5, 6)
+    bw_choices: Tuple[float, ...] = (0.5, 1.0, 5.0)
+    topo_choices: Tuple[Topology, ...] = (Topology.RING, Topology.PS,
+                                          Topology.MESH)
+
+
+def _random_layer(rng: np.random.Generator) -> LayerSpec:
+    t = ConvT(rng.choice([0, 1, 2, 3, 4, 5],
+                         p=[0.35, 0.15, 0.25, 0.08, 0.12, 0.05]))
+    if t == ConvT.FC:
+        seq = int(rng.choice([1, 64, 128, 256, 512]))
+        return LayerSpec("t", t, seq, 1, int(rng.choice([256, 512, 768, 1024,
+                                                         2048, 3072])),
+                         int(rng.choice([256, 512, 768, 1000, 3072])))
+    h = int(rng.choice([7, 14, 28, 56, 112, 224]))
+    cin = int(rng.choice([3, 16, 32, 64, 128, 256, 512, 1024]))
+    if t == ConvT.DWCONV:
+        cout, k, s, p = cin, 3, int(rng.choice([1, 2])), 1
+    elif t == ConvT.POINTWISE:
+        cout, k, s, p = int(rng.choice([16, 32, 64, 128, 256, 512, 1024])), 1, 1, 0
+    elif t == ConvT.POOL:
+        cout, k, s, p = cin, int(rng.choice([2, 3])), 2, 0
+    elif t == ConvT.ADD:
+        cout, k, s, p = cin, 1, 1, 0
+    else:
+        cout = int(rng.choice([16, 32, 64, 128, 256, 512]))
+        k = int(rng.choice([3, 5, 7]))
+        s = int(rng.choice([1, 2]))
+        p = k // 2
+    if h + 2 * p < k:
+        k = 1
+        p = 0
+    return LayerSpec("t", t, h, h, cin, cout, k, s, p)
+
+
+def _random_testbed(rng: np.random.Generator, cfg: TraceConfig) -> Testbed:
+    return Testbed(nodes=int(rng.choice(cfg.node_choices)),
+                   bandwidth_gbps=float(rng.choice(cfg.bw_choices)),
+                   topology=Topology(int(rng.choice(cfg.topo_choices))))
+
+
+def generate_i_traces(cfg: TraceConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """i-Estimator traces: features -> log(compute seconds)."""
+    rng = np.random.default_rng(cfg.seed)
+    xs: List[List[float]] = []
+    ys: List[float] = []
+    while len(xs) < cfg.n_samples:
+        layer = _random_layer(rng)
+        tb = _random_testbed(rng, cfg)
+        scheme = Scheme(int(rng.integers(0, 4)))
+        halo = 0
+        if scheme.spatial and rng.random() < 0.4:
+            halo = int(rng.integers(1, 5))
+        try:
+            t = compute_time_s(layer, scheme, tb, extra_halo=halo)
+        except ValueError:
+            continue
+        t *= float(np.exp(rng.normal(0.0, cfg.noise_sigma)))
+        xs.append(i_features(layer, scheme, tb, halo))
+        ys.append(np.log(max(t, 1e-9)))
+    return np.asarray(xs), np.asarray(ys)
+
+
+def generate_s_traces(cfg: TraceConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """s-Estimator traces: features -> log(sync seconds)."""
+    rng = np.random.default_rng(cfg.seed + 1)
+    xs: List[List[float]] = []
+    ys: List[float] = []
+    while len(xs) < cfg.n_samples:
+        layer = _random_layer(rng)
+        tb = _random_testbed(rng, cfg)
+        src = Scheme(int(rng.integers(0, 4)))
+        if rng.random() < 0.1:
+            nxt, dst = None, None
+        else:
+            nxt = _random_layer(rng)
+            dst = Scheme(int(rng.integers(0, 4)))
+        t = sync_time_s(layer, nxt, src, dst, tb)
+        t *= float(np.exp(rng.normal(0.0, cfg.noise_sigma)))
+        xs.append(s_features(layer, nxt, src, dst, tb))
+        ys.append(np.log(max(t, 1e-9)))
+    return np.asarray(xs), np.asarray(ys)
+
+
+def train_estimators(cfg: Optional[TraceConfig] = None,
+                     gbdt_kwargs: Optional[dict] = None,
+                     verbose: bool = False) -> GBDTEstimator:
+    """End-to-end: sample traces from the simulator, fit both GBDTs."""
+    cfg = cfg or TraceConfig()
+    kw = dict(n_estimators=120, learning_rate=0.15, max_depth=7)
+    kw.update(gbdt_kwargs or {})
+    xi, yi = generate_i_traces(cfg)
+    xs, ys = generate_s_traces(cfg)
+    i_model = GBDTRegressor(**kw, seed=cfg.seed).fit(
+        xi, yi, verbose_every=40 if verbose else 0)
+    s_model = GBDTRegressor(**kw, seed=cfg.seed + 7).fit(
+        xs, ys, verbose_every=40 if verbose else 0)
+    return GBDTEstimator(i_model, s_model)

@@ -1,0 +1,83 @@
+"""DPP vs exhaustive oracle (Theorem 1) + baseline dominance properties."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ALL_SCHEMES, AnalyticEstimator, Testbed, Topology,
+                        chain, plan_cost, plan_search)
+from repro.core.baselines import all_solutions, performance_scores
+from repro.core.exhaustive import exhaustive_search
+from repro.core.graph import ConvT, LayerSpec
+
+EST = AnalyticEstimator()
+
+
+def _rand_graph(rng, n):
+    layers = []
+    h = rng.choice([14, 28, 56])
+    c = rng.choice([16, 32, 64])
+    for i in range(n):
+        t = rng.choice([ConvT.CONV, ConvT.POINTWISE, ConvT.DWCONV])
+        k, s, p = {ConvT.CONV: (3, 1, 1), ConvT.POINTWISE: (1, 1, 0),
+                   ConvT.DWCONV: (3, 1, 1)}[t]
+        cout = c if t == ConvT.DWCONV else rng.choice([c, 2 * c,
+                                                       max(16, c // 2)])
+        l = LayerSpec(f"l{i}", t, h, h, c, cout, k, s, p)
+        layers.append(l)
+        h, c = l.out_h, cout
+    return chain("rand", layers)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_dpp_matches_exhaustive(seed):
+    """Theorem 1: with a correct cost oracle DPP is optimal."""
+    rng = random.Random(seed)
+    g = _rand_graph(rng, rng.randint(2, 6))
+    tb = Testbed(nodes=rng.choice([3, 4, 5]),
+                 bandwidth_gbps=rng.choice([0.5, 1.0, 5.0]),
+                 topology=Topology(rng.randint(0, 2)))
+    _, best = exhaustive_search(g, EST, tb)
+    res = plan_search(g, EST, tb)
+    assert res.cost == pytest.approx(best, rel=1e-12)
+    # the returned plan's independently-evaluated cost equals the DP value
+    assert plan_cost(g, res.plan, EST, tb) == pytest.approx(res.cost,
+                                                            rel=1e-9)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_flexpie_dominates_baselines(seed):
+    """FlexPie searches a superset space: it can never lose to a baseline."""
+    rng = random.Random(100 + seed)
+    g = _rand_graph(rng, rng.randint(4, 10))
+    tb = Testbed(nodes=4, bandwidth_gbps=rng.choice([0.5, 5.0]))
+    sols = all_solutions(g, EST, tb)
+    flex = sols["flexpie"][1]
+    for name, (_, cost) in sols.items():
+        assert flex <= cost + 1e-12, (name, cost, flex)
+    scores = performance_scores({k: v[1] for k, v in sols.items()})
+    assert scores["flexpie"] == pytest.approx(1.0)
+
+
+def test_pruning_reduces_calls():
+    rng = random.Random(7)
+    g = _rand_graph(rng, 10)
+    tb = Testbed(nodes=4)
+    res = plan_search(g, EST, tb)
+    # exhaustive space is (k*2)^(n-1)*k ~ 8^9; DPP must stay polynomial
+    assert res.stats.i_calls + res.stats.s_calls < 20_000
+    assert res.stats.pruned_threshold + res.stats.pruned_halo > 0
+
+
+def test_layerwise_beats_fixed_on_heterogeneous_graph():
+    """Layers with different shapes prefer different schemes (paper Fig. 2)."""
+    layers = [
+        LayerSpec("big_spatial", ConvT.CONV, 56, 56, 16, 16, 3, 1, 1),
+        LayerSpec("deep_channel", ConvT.POINTWISE, 56, 56, 16, 512, 1, 1, 0),
+        LayerSpec("deep_channel2", ConvT.POINTWISE, 56, 56, 512, 512, 1, 1, 0),
+    ]
+    g = chain("hetero", layers)
+    tb = Testbed(nodes=4, bandwidth_gbps=5.0)
+    sols = all_solutions(g, EST, tb)
+    assert sols["layerwise"][1] <= min(sols["one_dim_inh"][1],
+                                       sols["one_dim_outc"][1]) + 1e-12

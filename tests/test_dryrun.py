@@ -1,0 +1,60 @@
+"""End-to-end dry-run smoke (subprocess: 512 fake devices, production mesh).
+
+Compiles one cheap (arch x shape) pair on the real (16,16) mesh and checks
+the full record pipeline: lowering, memory analysis, loop-aware roofline
+terms, planner strategy.  The exhaustive 40x2 sweep lives in
+``experiments/dryrun/`` (python -m repro.launch.dryrun --all).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_record_pipeline():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        import json
+        from repro.launch.dryrun import run_one
+        rec = run_one('olmo-1b', 'decode_32k', verbose=False)
+        assert rec['mesh'] == '16x16' and rec['chips'] == 256
+        assert rec['hlo_flops'] > 0 and rec['hlo_bytes'] > 0
+        assert rec['bottleneck'] in ('compute', 'memory', 'collective')
+        assert 0 < rec['useful_ratio'] < 10
+        assert rec['mem_per_device']['temp_size_bytes'] is not None
+        # decode reads weights + KV every token -> memory-bound
+        assert rec['bottleneck'] == 'memory'
+        print('DRYRUN_RECORD_OK', json.dumps(rec['strategy']))
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert "DRYRUN_RECORD_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh()
+        m2 = make_production_mesh(multi_pod=True)
+        assert m1.axis_names == ('data', 'model') and m1.devices.size == 256
+        assert m2.axis_names == ('pod', 'data', 'model')
+        assert m2.devices.size == 512
+        print('MESH_OK')
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=300)
+    assert "MESH_OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,62 @@
+"""From-scratch GBDT: regression quality, persistence, estimator loop."""
+import numpy as np
+import pytest
+
+from repro.gbdt import GBDTRegressor
+
+
+def _toy(n=4000, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-2, 2, size=(n, 5))
+    y = (np.sin(x[:, 0]) + 0.5 * x[:, 1] ** 2 + (x[:, 2] > 0) * x[:, 3]
+         + 0.05 * rng.normal(size=n))
+    return x, y
+
+
+def test_gbdt_fits_nonlinear_function():
+    x, y = _toy()
+    xt, yt = _toy(seed=1)
+    m = GBDTRegressor(n_estimators=80, learning_rate=0.2, max_depth=5)
+    m.fit(x, y)
+    pred = m.predict(xt)
+    ss_res = np.sum((pred - yt) ** 2)
+    ss_tot = np.sum((yt - yt.mean()) ** 2)
+    r2 = 1 - ss_res / ss_tot
+    assert r2 > 0.9, r2
+
+
+def test_gbdt_save_load_roundtrip(tmp_path):
+    x, y = _toy(1000)
+    m = GBDTRegressor(n_estimators=20, max_depth=4).fit(x, y)
+    p = str(tmp_path / "model.npz")
+    m.save(p)
+    m2 = GBDTRegressor.load(p)
+    np.testing.assert_allclose(m.predict(x[:50]), m2.predict(x[:50]),
+                               rtol=1e-12)
+
+
+def test_gbdt_monotone_improvement():
+    x, y = _toy(2000)
+    errs = []
+    for n in (5, 20, 60):
+        m = GBDTRegressor(n_estimators=n, max_depth=4, subsample=1.0).fit(x, y)
+        errs.append(float(np.mean((m.predict(x) - y) ** 2)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_estimator_training_end_to_end():
+    """Traces -> GBDT -> DPP: plan must stay near the analytic optimum."""
+    from repro.core import AnalyticEstimator, Testbed
+    from repro.core.dpp import plan_search
+    from repro.core.plan import plan_cost
+    from repro.configs.edge_models import mobilenet_v1
+    from repro.sim import TraceConfig, train_estimators
+
+    est = train_estimators(TraceConfig(n_samples=4000, seed=3),
+                           gbdt_kwargs=dict(n_estimators=40, max_depth=6))
+    g = mobilenet_v1()
+    tb = Testbed(nodes=4, bandwidth_gbps=1.0)
+    gbdt_plan = plan_search(g, est, tb).plan
+    true_cost = plan_cost(g, gbdt_plan, AnalyticEstimator(), tb)
+    opt = plan_search(g, AnalyticEstimator(), tb).cost
+    assert true_cost <= opt * 1.30   # within 30% of optimal (small GBDT)

@@ -1,0 +1,82 @@
+"""Unit + property tests for partition geometry (core/partition.py)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import ConvT, LayerSpec, halo_growth
+from repro.core.partition import (ALL_SCHEMES, Scheme, grid_dims,
+                                  min_shard_extent, shard_work, split_sizes)
+
+
+def test_split_sizes_balanced():
+    assert split_sizes(14, 4) == [4, 4, 3, 3]
+    assert split_sizes(512, 4) == [128] * 4
+    assert sum(split_sizes(17, 5)) == 17
+
+
+def test_grid_dims():
+    assert grid_dims(4) == (2, 2)
+    assert grid_dims(9) == (3, 3)
+    gh, gw = grid_dims(3)
+    assert gh * gw >= 3
+
+
+@given(total=st.integers(1, 500), parts=st.integers(1, 8))
+def test_split_sizes_props(total, parts):
+    s = split_sizes(total, parts)
+    assert sum(s) == total and len(s) == parts
+    assert max(s) - min(s) <= 1    # balanced
+
+
+def _layer(h=28, c=64, k=3, s=1, t=ConvT.CONV):
+    return LayerSpec("l", t, h, h, c, c, k, s, k // 2)
+
+
+@given(h=st.sampled_from([7, 14, 28, 56]),
+       nodes=st.integers(2, 6),
+       scheme=st.sampled_from(list(ALL_SCHEMES)))
+@settings(max_examples=60, deadline=None)
+def test_shard_work_covers_layer(h, nodes, scheme):
+    l = _layer(h=h)
+    w = shard_work(l, scheme, nodes)
+    assert len(w.flops_per_node) == nodes
+    # without halo, shard flops sum to the full layer's flops
+    assert sum(w.flops_per_node) == pytest.approx(l.flops(), rel=1e-6)
+    assert w.straggler_flops >= l.flops() / nodes - 1e-6
+
+
+def test_halo_monotone_in_extra():
+    l = _layer()
+    base = shard_work(l, Scheme.INH, 4).straggler_flops
+    prev = base
+    for h in range(1, 5):
+        cur = shard_work(l, Scheme.INH, 4, extra_halo=h).straggler_flops
+        assert cur >= prev
+        prev = cur
+
+
+def test_outc_rejects_halo():
+    with pytest.raises(ValueError):
+        shard_work(_layer(), Scheme.OUTC, 4, extra_halo=1)
+
+
+def test_halo_growth_receptive_field():
+    # two 3x3 stride-1 convs: fusing the 2nd needs 2 extra rows at the 1st
+    ls = [_layer(k=3), _layer(k=3), _layer(k=3)]
+    h = halo_growth(ls, 2)
+    assert h == [4, 2, 0]
+    # pointwise layers grow no halo
+    ls2 = [_layer(k=3), _layer(k=1, t=ConvT.POINTWISE)]
+    assert halo_growth(ls2, 1) == [0, 0]
+    # stride amplifies downstream needs
+    ls3 = [_layer(k=3), LayerSpec("s2", ConvT.CONV, 28, 28, 64, 64, 3, 2, 1),
+           _layer(h=14, k=3)]
+    h3 = halo_growth(ls3, 2)
+    assert h3[0] == 2 * 2 + 2 and h3[1] == 2 and h3[2] == 0
+
+
+def test_min_shard_extent():
+    l = _layer(h=14)
+    assert min_shard_extent(l, Scheme.INH, 4) == 3   # 14 -> [4,4,3,3]
+    assert min_shard_extent(l, Scheme.OUTC, 4) == 1

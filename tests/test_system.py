@@ -1,0 +1,90 @@
+"""End-to-end behaviour tests for the FlexPie system."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import AnalyticEstimator, Testbed, Topology, chain
+from repro.core.baselines import all_solutions, performance_scores
+from repro.core.dpp import plan_search
+from repro.core.partition import Mode
+from repro.configs.edge_models import EDGE_MODELS, mobilenet_v1
+from repro.runtime.engine import (init_weights, run_partitioned,
+                                  run_reference)
+
+EST = AnalyticEstimator()
+
+
+def test_flexpie_wins_all_benchmarks_both_testbeds():
+    """Paper §4: FlexPie scores 1.0 across 4 models x {3,4}-node testbeds."""
+    for nodes in (3, 4):
+        tb = Testbed(nodes=nodes, bandwidth_gbps=1.0)
+        for name, fn in EDGE_MODELS.items():
+            sols = all_solutions(fn(), EST, tb)
+            scores = performance_scores({k: v[1] for k, v in sols.items()})
+            assert scores["flexpie"] == pytest.approx(1.0), (name, nodes)
+
+
+def test_bandwidth_drives_fusion():
+    """§2.3 trade-off: lower bandwidth -> more NT (redundant compute)."""
+    g = mobilenet_v1()
+    nt = {}
+    for bw in (5.0, 0.5):
+        plan = plan_search(g, EST, Testbed(nodes=4, bandwidth_gbps=bw)).plan
+        nt[bw] = sum(1 for _, m in plan.steps if m == Mode.NT)
+    assert nt[0.5] >= nt[5.0]
+    assert nt[0.5] > 0
+
+
+def test_testbed_changes_optimal_plan():
+    """§2.2: the optimal scheme assignment depends on the testbed."""
+    g = mobilenet_v1()
+    p4 = plan_search(g, EST, Testbed(nodes=4)).plan
+    p3 = plan_search(g, EST, Testbed(nodes=3)).plan
+    assert p4.steps != p3.steps
+
+
+def test_topology_affects_cost():
+    g = mobilenet_v1()
+    costs = {}
+    for topo in (Topology.RING, Topology.PS, Topology.MESH):
+        tb = Testbed(nodes=4, bandwidth_gbps=0.5, topology=topo)
+        costs[topo] = plan_search(g, EST, tb).cost
+    assert costs[Topology.PS] > costs[Topology.MESH]
+
+
+def test_planner_plan_executes_exactly_end_to_end():
+    """Plan from the optimizer -> engine -> bit-exact output (reduced res)."""
+    g_full = mobilenet_v1(width=32)
+    g = chain("mb32", g_full.layers[:7])
+    key = jax.random.PRNGKey(0)
+    ws = init_weights(g, key)
+    x = jax.random.normal(key, (32, 32, 3))
+    ref = run_reference(g, ws, x)
+    for nodes in (3, 4):
+        plan = plan_search(g, EST, Testbed(nodes=nodes,
+                                           bandwidth_gbps=0.5)).plan
+        out, stats = run_partitioned(g, ws, x, plan, nodes)
+        assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+        assert stats.sync_points >= 1
+
+
+def test_bert_insensitive_to_scheme():
+    """Paper limitation: BERT's matmul layers parallelize trivially."""
+    from repro.configs.edge_models import bert_base
+    g = bert_base()
+    tb = Testbed(nodes=4, bandwidth_gbps=5.0)
+    sols = all_solutions(g, EST, tb)
+    times = {k: v[1] for k, v in sols.items()}
+    flexible = [times["layerwise"], times["fused_fixed"], times["flexpie"]]
+    assert max(flexible) / min(flexible) < 1.05
+
+
+def test_search_time_scales_polynomially():
+    import time
+    from repro.configs.edge_models import resnet101
+    g = resnet101()      # 136 layers
+    t0 = time.time()
+    res = plan_search(g, EST, Testbed(nodes=4))
+    dt = time.time() - t0
+    assert dt < 30.0, dt
+    assert res.cost > 0
