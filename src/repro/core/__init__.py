@@ -1,17 +1,20 @@
 """FlexPie core: flexible combinatorial optimization for model partition."""
-from .graph import ConvT, LayerSpec, ModelGraph, chain, halo_growth
+from .graph import (GRAPH_INPUT, Branch, ConvT, LayerSpec, ModelGraph, chain,
+                    halo_growth)
 from .partition import ALL_SCHEMES, Mode, Scheme
 from .cost import Testbed, Topology
 from .estimator import AnalyticEstimator, GBDTEstimator
-from .plan import Plan, fixed_plan, plan_cost, plan_feasible
+from .plan import (Plan, dag_plan_cost, fixed_plan, plan_cost, plan_feasible,
+                   steps_segments)
 from .dpp import SearchResult, plan_search
-from .exhaustive import exhaustive_search
+from .exhaustive import enumerate_dag_plans, exhaustive_search
 from . import baselines
 
 __all__ = [
-    "ConvT", "LayerSpec", "ModelGraph", "chain", "halo_growth",
-    "ALL_SCHEMES", "Mode", "Scheme", "Testbed", "Topology",
-    "AnalyticEstimator", "GBDTEstimator", "Plan", "fixed_plan", "plan_cost",
-    "plan_feasible", "SearchResult", "plan_search", "exhaustive_search",
-    "baselines",
+    "GRAPH_INPUT", "Branch", "ConvT", "LayerSpec", "ModelGraph", "chain",
+    "halo_growth", "ALL_SCHEMES", "Mode", "Scheme", "Testbed", "Topology",
+    "AnalyticEstimator", "GBDTEstimator", "Plan", "dag_plan_cost",
+    "fixed_plan", "plan_cost", "plan_feasible", "steps_segments",
+    "SearchResult", "plan_search", "enumerate_dag_plans",
+    "exhaustive_search", "baselines",
 ]

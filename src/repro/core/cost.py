@@ -67,7 +67,7 @@ def compute_time_s(layer: LayerSpec, scheme: Scheme, tb: Testbed,
         eff *= 0.45
     elif layer.conv_t == ConvT.POOL:
         eff *= 0.60
-    elif layer.conv_t == ConvT.ADD:
+    elif layer.conv_t in (ConvT.ADD, ConvT.CONCAT):
         eff *= 0.30
     return work.straggler_flops / (tb.device_gflops * 1e9 * eff)
 

@@ -1,4 +1,4 @@
-"""Dynamic Partition Planner — Algorithm 1 (§3.3).
+"""Dynamic Partition Planner — Algorithm 1 (§3.3), extended to DAGs.
 
 Reverse-order DP over T-states.  ``S[i][p]`` is the optimal remaining time
 from layer ``i`` to the end, given layer ``i``'s input is exactly sharded in
@@ -15,12 +15,22 @@ Pruning (the paper's "piecing together" list):
      backtrack stops as soon as the partial segment cost alone exceeds the
      incumbent (and when the halo swallows the whole shard, at which point
      redundant compute has degenerated into full replication).
+
+Branched graphs (fan-in/fan-out >= 2) run the same reverse DP **per branch**
+of ``ModelGraph.linearize()`` and compose at junctions: branch tails and
+junction layers are forced T-mode sync points, fork deliveries are summed,
+and each merge pays the max over its incoming branch re-layouts (see
+``plan.dag_plan_cost`` — the DP and the cost function share one semantics,
+which is what keeps the Theorem-1 oracle property on DAGs).  The junction
+skeleton must be a "ladder" — parallel branch bundles between consecutive
+fork/merge points, which covers residual blocks and Inception-style modules;
+arbitrary multi-source or nested-fork DAGs raise ``ValueError``.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .cost import Testbed
 from .estimator import CostEstimator
@@ -53,7 +63,11 @@ def plan_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
                 allow_fusion: bool = True) -> SearchResult:
     """Run DPP.  ``allow_fusion=False`` restricts to all-T plans (the
     layerwise baseline); ``schemes`` restricted to one scheme with fusion on
-    gives the fused-layer baseline."""
+    gives the fused-layer baseline.  Dispatches to the per-branch DAG
+    composition when the graph is not a chain."""
+    if not graph.is_chain:
+        return _dag_plan_search(graph, est, tb, tuple(schemes), max_segment,
+                                allow_fusion)
     layers = graph.layers
     n = len(layers)
     k = len(schemes)
@@ -114,4 +128,338 @@ def plan_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
         i = b + 1
         if qi >= 0:
             pi = qi
+    return SearchResult(plan=Plan(tuple(steps)), cost=total, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# DAG composition: per-branch chain tables + ladder DP over junctions.
+# ---------------------------------------------------------------------------
+
+def _chain_tables(ls, icost, scost, schemes, max_segment, allow_fusion,
+                  head_solo, nodes, stats):
+    """Reverse DP over one branch with pinned boundary layouts.
+
+    Returns ``{(head_idx, tail_idx): (cost, steps)}`` — the minimal
+    *internal* cost of the branch (i-costs with halos + s-costs at internal
+    T boundaries; no entry delivery, no exit delivery/gather) with the first
+    segment using ``schemes[head_idx]`` and the last ``schemes[tail_idx]``.
+    ``head_solo`` pins the first layer to a singleton T segment (merge
+    layers: their inputs arrive from several producers, so they can never be
+    NT-fused upstream and we also keep them out of downstream fusion).
+    """
+    n = len(ls)
+    k = len(schemes)
+    tables: Dict[Tuple[int, int], Tuple[float, tuple]] = {}
+
+    # Segment and boundary costs are identical across the k tail pins, so
+    # compute each once (lazily) and share them between the per-tail DPs.
+    seg_cache: Dict[Tuple[int, int], List[Tuple[int, float]]] = {}
+    bound_cache: Dict[Tuple[int, int, int], float] = {}
+
+    def seg_costs(i: int, pi: int) -> List[Tuple[int, float]]:
+        hit = seg_cache.get((i, pi))
+        if hit is not None:
+            return hit
+        p = schemes[pi]
+        out: List[Tuple[int, float]] = []
+        seg_hi = min(i + max_segment, n) if allow_fusion else i + 1
+        if head_solo and i == 0:
+            seg_hi = i + 1
+        for b in range(i, seg_hi):
+            if b > i and not p.spatial:
+                break
+            halos = halo_growth(ls[i:b + 1], b - i)
+            if b > i and 2 * halos[0] >= min_shard_extent(ls[i], p, nodes):
+                stats.pruned_halo += 1
+                break
+            segcost = 0.0
+            for off, m in enumerate(range(i, b + 1)):
+                segcost += icost(ls[m], p, halos[off] if b > i else 0)
+            out.append((b, segcost))
+        seg_cache[(i, pi)] = out
+        return out
+
+    def bound_cost(b: int, pi: int, qi: int) -> float:
+        key = (b, pi, qi)
+        hit = bound_cache.get(key)
+        if hit is None:
+            hit = scost(ls[b], ls[b + 1], schemes[pi], schemes[qi])
+            bound_cache[key] = hit
+        return hit
+
+    for ti in range(k):
+        S = [[_INF] * k for _ in range(n)]
+        choice = [[(-1, -1)] * k for _ in range(n)]
+        for i in range(n - 1, -1, -1):
+            for pi in range(k):
+                best, best_choice = _INF, (-1, -1)
+                stats.states += 1
+                for b, segcost in seg_costs(i, pi):
+                    if segcost >= best:
+                        stats.pruned_threshold += 1
+                        break
+                    if b == n - 1:
+                        if pi == ti and segcost < best:
+                            best, best_choice = segcost, (b, -1)
+                    else:
+                        for qi in range(k):
+                            if S[b + 1][qi] == _INF:
+                                continue
+                            c = (segcost + bound_cost(b, pi, qi)
+                                 + S[b + 1][qi])
+                            if c < best:
+                                best, best_choice = c, (b, qi)
+                S[i][pi] = best
+                choice[i][pi] = best_choice
+        for pi in range(k):
+            if S[0][pi] == _INF:
+                continue
+            steps: List[Tuple[Scheme, Mode]] = []
+            i, cp = 0, pi
+            while i < n:
+                b, qi = choice[i][cp]
+                p = schemes[cp]
+                for m in range(i, b + 1):
+                    steps.append((p, Mode.NT if m < b else Mode.T))
+                i = b + 1
+                if qi >= 0:
+                    cp = qi
+            tables[(pi, ti)] = (S[0][pi], tuple(steps))
+    return tables
+
+
+def _ladder(graph: ModelGraph):
+    """Condense the DAG's branches into a spine with parallel bundles.
+
+    Returns ``(branches, spine, bundles)`` where ``spine`` is a list of
+    branch indices and ``bundles[t] = (interior_branch_ids, n_direct)``
+    describes the parallel branches (plus identity skip edges) between
+    ``spine[t]``'s tail (the fork) and ``spine[t+1]``'s head (the merge).
+    """
+    branches = graph.linearize()
+    n_br = len(branches)
+    bidx: Dict[int, int] = {}
+    for t, br in enumerate(branches):
+        for i in br.ids:
+            bidx[i] = t
+    preds: List[set] = [set() for _ in range(n_br)]
+    succs: List[set] = [set() for _ in range(n_br)]
+    for i, prods in enumerate(graph.producer_ids):
+        for j in prods:
+            if j >= 0 and bidx[j] != bidx[i]:
+                preds[bidx[i]].add(bidx[j])
+                succs[bidx[j]].add(bidx[i])
+    sources = [t for t in range(n_br) if not preds[t]]
+    if len(sources) != 1:
+        raise ValueError(
+            f"{graph.name}: plan_search needs a single-source DAG "
+            f"(got {len(sources)} source branches)")
+    spine = [sources[0]]
+    bundles: List[Tuple[List[int], int]] = []
+    cur = sources[0]
+    used = {cur}
+    while succs[cur]:
+        interior: List[int] = []
+        merges: set = set()
+        for b in sorted(succs[cur]):
+            if graph.fan_in(branches[b].head) >= 2:
+                merges.add(b)
+            else:
+                interior.append(b)
+        for b in interior:
+            if preds[b] != {cur} or len(succs[b]) != 1:
+                raise ValueError(
+                    f"{graph.name}: nested fork at branch {b} — only "
+                    f"fork -> parallel branches -> merge ladders are "
+                    f"supported by plan_search")
+            merges.update(succs[b])
+        if len(merges) != 1:
+            raise ValueError(
+                f"{graph.name}: branches from {branches[cur].tail} do not "
+                f"reconverge at a single merge — not a ladder DAG")
+        nxt = merges.pop()
+        if not preds[nxt] <= set(interior) | {cur}:
+            raise ValueError(
+                f"{graph.name}: merge at layer "
+                f"{graph.layers[branches[nxt].head].name} has inputs from "
+                f"outside its bundle — not a ladder DAG")
+        n_direct = sum(1 for j in graph.producer_ids[branches[nxt].head]
+                       if j == branches[cur].tail)
+        bundles.append((interior, n_direct))
+        spine.append(nxt)
+        used.add(nxt)
+        used.update(interior)
+        cur = nxt
+    if len(used) != n_br:
+        raise ValueError(f"{graph.name}: {n_br - len(used)} branches are "
+                         f"unreachable along the ladder — unsupported DAG")
+    return branches, spine, bundles
+
+
+def _dag_plan_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
+                     schemes: Tuple[Scheme, ...], max_segment: int,
+                     allow_fusion: bool) -> SearchResult:
+    stats = SearchStats()
+
+    def icost(l, p, halo=0):
+        stats.i_calls += 1
+        return est.i_cost(l, p, tb, extra_halo=halo)
+
+    def scost(l, nxt, s, d):
+        stats.s_calls += 1
+        return est.s_cost(l, nxt, s, d, tb)
+
+    branches, spine, bundles = _ladder(graph)
+    layers = graph.layers
+    k = len(schemes)
+    K = len(spine)
+
+    def btable(t, head_solo):
+        ls = [layers[i] for i in branches[t].ids]
+        return _chain_tables(ls, icost, scost, schemes, max_segment,
+                             allow_fusion, head_solo, tb.nodes, stats)
+
+    spine_tab = [btable(s, head_solo=(idx > 0))
+                 for idx, s in enumerate(spine)]
+    interior_tab = {b: btable(b, head_solo=False)
+                    for ints, _ in bundles for b in ints}
+
+    # min over head schemes of (fork delivery + branch internal cost), per
+    # (fork tail scheme, branch tail scheme)
+    ib_memo: Dict[Tuple[int, int, int], Tuple[float, int]] = {}
+
+    def ib_entry(b: int, qf_i: int, pt_i: int) -> Tuple[float, int]:
+        key = (b, qf_i, pt_i)
+        hit = ib_memo.get(key)
+        if hit is not None:
+            return hit
+        fork_layer = layers[graph.producer_ids[branches[b].head][0]]
+        head_layer = layers[branches[b].head]
+        best: Tuple[float, int] = (_INF, -1)
+        for ph_i in range(k):
+            e = interior_tab[b].get((ph_i, pt_i))
+            if e is None:
+                continue
+            c = scost(fork_layer, head_layer, schemes[qf_i],
+                      schemes[ph_i]) + e[0]
+            if c < best[0]:
+                best = (c, ph_i)
+        ib_memo[key] = best
+        return best
+
+    bundle_memo: Dict[Tuple[int, int, int], Tuple[float, Optional[list]]] = {}
+
+    def bundle_solve(t: int, pt_i: int, qm_i: int):
+        """Min cost of delivering the bundle between spine t and t+1, given
+        the fork tail scheme and merge head scheme.  Per-branch internal and
+        fork-delivery costs sum; merge deliveries combine with max.  Exact:
+        enumerate which delivery attains the max, pin it, and let every
+        other branch independently take its cheapest option whose delivery
+        fits under it."""
+        key = (t, pt_i, qm_i)
+        hit = bundle_memo.get(key)
+        if hit is not None:
+            return hit
+        ints, n_direct = bundles[t]
+        fork_l = layers[branches[spine[t]].tail]
+        merge_l = layers[branches[spine[t + 1]].head]
+        d0 = scost(fork_l, merge_l, schemes[pt_i],
+                   schemes[qm_i]) if n_direct else None
+        if not ints:
+            res = (d0 if d0 is not None else 0.0, [])
+            bundle_memo[key] = res
+            return res
+        opts: List[List[Tuple[float, float, int, int]]] = []
+        for b in ints:
+            tail_l = layers[branches[b].tail]
+            o = []
+            for pti in range(k):
+                c, ph_i = ib_entry(b, pt_i, pti)
+                if c == _INF:
+                    continue
+                d = scost(tail_l, merge_l, schemes[pti], schemes[qm_i])
+                o.append((c, d, ph_i, pti))
+            if not o:
+                bundle_memo[key] = (_INF, None)
+                return (_INF, None)
+            opts.append(o)
+        candidates: List[Tuple[float, int, int]] = []
+        if d0 is not None:
+            candidates.append((d0, -1, -1))
+        for bi, o in enumerate(opts):
+            for oi, (_, d, _, _) in enumerate(o):
+                candidates.append((d, bi, oi))
+        best_total, best_assign = _INF, None
+        for m, fbi, foi in candidates:
+            if d0 is not None and d0 > m:
+                continue
+            total, assign, ok = m, [], True
+            for bi, o in enumerate(opts):
+                if bi == fbi:
+                    c, _, ph_i, pti = o[foi]
+                    total += c
+                    assign.append((ints[bi], ph_i, pti))
+                    continue
+                bc, ba = _INF, None
+                for c, d, ph_i, pti in o:
+                    if d <= m and c < bc:
+                        bc, ba = c, (ints[bi], ph_i, pti)
+                if ba is None:
+                    ok = False
+                    break
+                total += bc
+                assign.append(ba)
+            if ok and total < best_total:
+                best_total, best_assign = total, assign
+        bundle_memo[key] = (best_total, best_assign)
+        return best_total, best_assign
+
+    # ---- spine DP (reverse) -----------------------------------------------
+    # V[t][ph] = (cost from spine t's head onward, tail scheme, next head)
+    V: List[Dict[int, Tuple[float, int, int]]] = [dict() for _ in range(K)]
+    tail_l = layers[branches[spine[-1]].tail]
+    for ph_i in range(k):
+        best = (_INF, -1, -1)
+        for pt_i in range(k):
+            e = spine_tab[K - 1].get((ph_i, pt_i))
+            if e is None:
+                continue
+            c = e[0] + scost(tail_l, None, schemes[pt_i], None)
+            if c < best[0]:
+                best = (c, pt_i, -1)
+        if best[0] < _INF:
+            V[K - 1][ph_i] = best
+    for t in range(K - 2, -1, -1):
+        for ph_i in range(k):
+            best = (_INF, -1, -1)
+            for pt_i in range(k):
+                e = spine_tab[t].get((ph_i, pt_i))
+                if e is None:
+                    continue
+                for ph2, (suffix, _, _) in V[t + 1].items():
+                    bc, _assign = bundle_solve(t, pt_i, ph2)
+                    c = e[0] + bc + suffix
+                    if c < best[0]:
+                        best = (c, pt_i, ph2)
+            if best[0] < _INF:
+                V[t][ph_i] = best
+    if not V[0]:
+        raise RuntimeError(f"{graph.name}: no feasible plan found")
+    ph = min(V[0], key=lambda p: V[0][p][0])
+    total = V[0][ph][0]
+
+    # ---- reconstruction ---------------------------------------------------
+    steps: List[Optional[Tuple[Scheme, Mode]]] = [None] * len(layers)
+    for t in range(K):
+        _, pt_i, ph_next = V[t][ph]
+        for idx, st in zip(branches[spine[t]].ids,
+                           spine_tab[t][(ph, pt_i)][1]):
+            steps[idx] = st
+        if t < K - 1:
+            _, assign = bundle_solve(t, pt_i, ph_next)
+            for b, ph_b, pt_b in assign:
+                for idx, st in zip(branches[b].ids,
+                                   interior_tab[b][(ph_b, pt_b)][1]):
+                    steps[idx] = st
+            ph = ph_next
     return SearchResult(plan=Plan(tuple(steps)), cost=total, stats=stats)

@@ -9,9 +9,11 @@ Two implementations:
   from-scratch histogram GBDT regressors (``repro/gbdt``) trained on traces
   sampled from the simulator (``repro/sim/trace.py``).  Predicts log-time.
 
-Feature expression (Fig. 4, extended with the planner's decision variables):
-``[InH, InW, InC, OutH, OutW, OutC, K, S, P, ConvT, bandwidth, topology]``
-plus ``nodes, scheme, halo`` for i- and ``nodes, src, dst, next_K`` for s-.
+Feature expression (Fig. 4, extended with the planner's decision variables
+and the DAG fan-in so the estimators see merge structure):
+``[InH, InW, InC, OutH, OutW, OutC, K, S, P, ConvT, FanIn, bandwidth,
+topology]`` plus ``nodes, scheme, halo`` for i- and ``nodes, src, dst,
+next_K, next_fan_in`` for s-.
 """
 from __future__ import annotations
 
@@ -60,13 +62,15 @@ def s_features(layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
     return [*layer.feature_vector(), tb.bandwidth_gbps, float(tb.topology),
             float(tb.nodes), float(src),
             -1.0 if dst is None else float(dst),
-            0.0 if nxt is None else float(nxt.k)]
+            0.0 if nxt is None else float(nxt.k),
+            0.0 if nxt is None else float(nxt.fan_in)]
 
 
 I_FEATURE_NAMES = ["InH", "InW", "InC", "OutH", "OutW", "OutC", "K", "S", "P",
-                   "ConvT", "BW", "Topo", "Nodes", "Scheme", "Halo"]
+                   "ConvT", "FanIn", "BW", "Topo", "Nodes", "Scheme", "Halo"]
 S_FEATURE_NAMES = ["InH", "InW", "InC", "OutH", "OutW", "OutC", "K", "S", "P",
-                   "ConvT", "BW", "Topo", "Nodes", "Src", "Dst", "NextK"]
+                   "ConvT", "FanIn", "BW", "Topo", "Nodes", "Src", "Dst",
+                   "NextK", "NextFanIn"]
 
 
 class GBDTEstimator:
@@ -91,7 +95,8 @@ class GBDTEstimator:
 
     def s_cost(self, layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
                dst: Optional[Scheme], tb: Testbed) -> float:
-        key = (layer, None if nxt is None else nxt.k, src, dst, tb)
+        key = (layer, None if nxt is None else (nxt.k, nxt.fan_in), src, dst,
+               tb)
         hit = self._s_cache.get(key)
         if hit is None:
             x = np.asarray([s_features(layer, nxt, src, dst, tb)],

@@ -1,12 +1,15 @@
 """Brute-force search over the full (scheme, mode) space.
 
 Used only for small graphs: the Theorem-1 property tests compare DPP's result
-against this oracle under the same plan-validity constraints.
+against this oracle under the same plan-validity constraints.  Branched
+graphs enumerate per-branch chain plans (merge layers pinned to T-mode
+singleton segments, branch tails always T) and take the product across
+branches, scoring with the shared ``dag_plan_cost`` semantics.
 """
 from __future__ import annotations
 
 import itertools
-from typing import Iterator, Optional, Sequence, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 from .cost import Testbed
 from .estimator import CostEstimator
@@ -17,7 +20,7 @@ from .plan import Plan, plan_cost, plan_feasible
 
 def enumerate_plans(n: int, schemes: Sequence[Scheme] = ALL_SCHEMES,
                     allow_fusion: bool = True) -> Iterator[Plan]:
-    """All valid plans: segmentations x per-segment schemes.
+    """All valid chain plans: segmentations x per-segment schemes.
 
     Multi-layer segments must use a single spatial scheme (see plan.py).
     """
@@ -44,12 +47,36 @@ def enumerate_plans(n: int, schemes: Sequence[Scheme] = ALL_SCHEMES,
             yield Plan(tuple(steps))
 
 
+def enumerate_dag_plans(graph: ModelGraph,
+                        schemes: Sequence[Scheme] = ALL_SCHEMES,
+                        allow_fusion: bool = True) -> Iterator[Plan]:
+    """All valid plans of a branched graph: product of per-branch chain
+    plans, with merge heads restricted to T-mode (junction sync points)."""
+    branches = graph.linearize()
+    per_branch: List[List[Plan]] = []
+    for br in branches:
+        plans = list(enumerate_plans(len(br.ids), schemes, allow_fusion))
+        if graph.fan_in(br.head) >= 2:
+            plans = [p for p in plans if p.steps[0][1] == Mode.T]
+        per_branch.append(plans)
+    n = len(graph)
+    for combo in itertools.product(*per_branch):
+        steps: list = [None] * n
+        for br, p in zip(branches, combo):
+            for idx, st in zip(br.ids, p.steps):
+                steps[idx] = st
+        yield Plan(tuple(steps))
+
+
 def exhaustive_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
                       schemes: Sequence[Scheme] = ALL_SCHEMES,
                       allow_fusion: bool = True) -> Tuple[Plan, float]:
     best: Optional[Plan] = None
     best_cost = float("inf")
-    for plan in enumerate_plans(len(graph), schemes, allow_fusion):
+    gen = (enumerate_plans(len(graph), schemes, allow_fusion)
+           if graph.is_chain
+           else enumerate_dag_plans(graph, schemes, allow_fusion))
+    for plan in gen:
         if not plan_feasible(graph, plan, tb.nodes):
             continue
         c = plan_cost(graph, plan, est, tb)

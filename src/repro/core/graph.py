@@ -1,18 +1,27 @@
 """Layer-graph IR for the edge-inference planner.
 
-FlexPie consumes a computation graph of DNN layers (Fig. 3).  We model the
-graph as an ordered chain of :class:`LayerSpec` (residual adds are folded into
-``extra_flop_factor`` of the layer that closes the block — the planner only
-needs shapes, FLOPs and receptive fields, not autodiff semantics).  The real
-tensor programs live in ``repro/models`` and ``repro/runtime/engine.py``; this
-IR is what the combinatorial optimizer reasons about.
+FlexPie consumes a computation graph of DNN layers (Fig. 3).  The IR is a
+DAG of :class:`LayerSpec` nodes: each layer names its producers via
+``inputs`` (empty = the previous layer in the tuple, which keeps plain
+chains working with zero changes).  Multi-input merge layers (``ADD``,
+``CONCAT``) carry real branch structure — residual blocks and
+Inception-style modules are no longer folded into ``extra_flop_factor``.
+:meth:`ModelGraph.linearize` decomposes the DAG into chain *branches*
+joined at fork/merge junctions; the planner, cost model and engine all
+operate per-branch and compose at the junctions.  The real tensor programs
+live in ``repro/models`` and ``repro/runtime/engine.py``; this IR is what
+the combinatorial optimizer reasons about.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+#: Sentinel producer name meaning "the graph input tensor".
+GRAPH_INPUT = "@input"
 
 
 class ConvT(enum.IntEnum):
@@ -23,7 +32,12 @@ class ConvT(enum.IntEnum):
     POINTWISE = 2     # 1x1 convolution
     POOL = 3          # max/avg pool (no weights)
     FC = 4            # fully connected / matmul (BERT, classifier heads)
-    ADD = 5           # residual add (elementwise)
+    ADD = 5           # residual add (elementwise, multi-input merge)
+    CONCAT = 6        # channel concatenation (Inception-style merge)
+
+
+#: Layer types allowed to have fan-in >= 2.
+MERGE_TYPES = (ConvT.ADD, ConvT.CONCAT)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +49,13 @@ class LayerSpec:
     ``S``, padding ``P``.  For FC/matmul layers the convention is
     ``InH = OutH = seq_len`` (BERT tokens), ``InW = OutW = 1``,
     ``InC/OutC = feature dims`` and ``K = S = 1, P = 0``.
+
+    ``inputs`` names this layer's producers.  Empty means "the previous
+    layer in the graph tuple" (the chain-compat default; the graph input for
+    layer 0).  Merge layers (``ADD``/``CONCAT``) list two or more producers;
+    ``ADD`` inputs must agree on all dims, ``CONCAT`` inputs must agree
+    spatially and their channels sum to ``in_c``.  :data:`GRAPH_INPUT`
+    refers to the raw graph input (multi-tower models).
     """
 
     name: str
@@ -46,7 +67,8 @@ class LayerSpec:
     k: int = 1
     s: int = 1
     p: int = 0
-    extra_flop_factor: float = 1.0  # folds residual adds / activations
+    extra_flop_factor: float = 1.0  # folds activations / attention scores
+    inputs: Tuple[str, ...] = ()    # producer names; () = chain default
 
     @property
     def out_h(self) -> int:
@@ -55,6 +77,11 @@ class LayerSpec:
     @property
     def out_w(self) -> int:
         return (self.in_w + 2 * self.p - self.k) // self.s + 1
+
+    @property
+    def fan_in(self) -> int:
+        """Number of producer tensors (1 for chain-default layers)."""
+        return max(1, len(self.inputs))
 
     # ---- workload ---------------------------------------------------------
     def flops(self) -> float:
@@ -69,7 +96,10 @@ class LayerSpec:
         elif self.conv_t == ConvT.FC:
             f = 2.0 * self.in_h * self.in_c * self.out_c
         elif self.conv_t == ConvT.ADD:
-            f = 1.0 * oh * ow * self.out_c
+            # (fan_in - 1) elementwise adds; the folded chain form counts one
+            f = max(1, self.fan_in - 1) * 1.0 * oh * ow * self.out_c
+        elif self.conv_t == ConvT.CONCAT:
+            f = 1.0 * oh * ow * self.out_c   # copy cost
         else:  # pragma: no cover - exhaustive enum
             raise ValueError(self.conv_t)
         return f * self.extra_flop_factor
@@ -90,11 +120,14 @@ class LayerSpec:
         return 0
 
     def feature_vector(self) -> Tuple[float, ...]:
-        """Shape part of the Fig. 4 feature expression (7 of 12 dims)."""
+        """Shape + structure part of the feature expression (11 values; see
+        ``I_FEATURE_NAMES``/``S_FEATURE_NAMES`` in ``core/estimator.py`` for
+        the full i-/s-feature layouts these embed into)."""
         return (
             float(self.in_h), float(self.in_w), float(self.in_c),
             float(self.out_h), float(self.out_w), float(self.out_c),
             float(self.k), float(self.s), float(self.p), float(self.conv_t),
+            float(self.fan_in),
         )
 
     def with_input(self, in_h: int, in_w: int) -> "LayerSpec":
@@ -102,19 +135,179 @@ class LayerSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class Branch:
+    """A maximal chain of layer indices between junctions of the DAG."""
+
+    ids: Tuple[int, ...]
+
+    @property
+    def head(self) -> int:
+        return self.ids[0]
+
+    @property
+    def tail(self) -> int:
+        return self.ids[-1]
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelGraph:
-    """Chain of layers; ``layers[i+1].in_* == layers[i].out_*`` must hold."""
+    """DAG of layers, stored in topological order.
+
+    Plain chains (no explicit ``inputs``) behave exactly as before:
+    ``layers[i+1].in_* == layers[i].out_*`` must hold and every planner /
+    engine path is unchanged.  Branched graphs additionally validate merge
+    shapes, require a unique output layer in the last position, and expose
+    the branch decomposition via :meth:`linearize`.
+    """
 
     name: str
     layers: Tuple[LayerSpec, ...]
 
     def __post_init__(self) -> None:
-        for a, b in zip(self.layers, self.layers[1:]):
-            if (a.out_h, a.out_w) != (b.in_h, b.in_w) or a.out_c != b.in_c:
+        self._validate()
+
+    # ---- structure --------------------------------------------------------
+    @functools.cached_property
+    def producer_ids(self) -> Tuple[Tuple[int, ...], ...]:
+        """Resolved producer indices per layer; ``-1`` is the graph input."""
+        counts: Dict[str, int] = {}
+        for l in self.layers:
+            counts[l.name] = counts.get(l.name, 0) + 1
+        by_name: Dict[str, int] = {}
+        out: List[Tuple[int, ...]] = []
+        for i, l in enumerate(self.layers):
+            if l.inputs:
+                ids = []
+                for nm in l.inputs:
+                    if nm == GRAPH_INPUT:
+                        ids.append(-1)
+                        continue
+                    if counts.get(nm, 0) > 1:
+                        raise ValueError(
+                            f"{self.name}: input {nm!r} of {l.name} is "
+                            f"ambiguous (duplicate layer name)")
+                    j = by_name.get(nm)
+                    if j is None:
+                        raise ValueError(
+                            f"{self.name}: {l.name} references unknown or "
+                            f"later layer {nm!r} (layers must be in "
+                            f"topological order)")
+                    ids.append(j)
+                out.append(tuple(ids))
+            else:
+                out.append((i - 1,) if i else (-1,))
+            by_name[l.name] = i
+        return tuple(out)
+
+    @functools.cached_property
+    def consumer_ids(self) -> Tuple[Tuple[int, ...], ...]:
+        cons: List[List[int]] = [[] for _ in self.layers]
+        for i, prods in enumerate(self.producer_ids):
+            for j in prods:
+                if j >= 0:
+                    cons[j].append(i)
+        return tuple(tuple(c) for c in cons)
+
+    def fan_in(self, i: int) -> int:
+        return len(self.producer_ids[i])
+
+    def fan_out(self, i: int) -> int:
+        return len(self.consumer_ids[i])
+
+    @functools.cached_property
+    def is_chain(self) -> bool:
+        """True iff every layer consumes exactly the previous one."""
+        return all(prods == ((i - 1,) if i else (-1,))
+                   for i, prods in enumerate(self.producer_ids))
+
+    def _validate(self) -> None:
+        prods = self.producer_ids
+        if not self.layers:
+            return
+        l0 = self.layers[0]
+        # the graph input's shape is fixed by layer 0's declared input
+        in_shape = (l0.in_h, l0.in_w, l0.in_c)
+
+        def pshape(j: int) -> Tuple[int, int, int]:
+            if j < 0:
+                return in_shape
+            p = self.layers[j]
+            return (p.out_h, p.out_w, p.out_c)
+
+        def pname(j: int) -> str:
+            return GRAPH_INPUT if j < 0 else self.layers[j].name
+
+        for i, l in enumerate(self.layers):
+            ins = prods[i]
+            if len(ins) >= 2 and l.conv_t not in MERGE_TYPES:
                 raise ValueError(
-                    f"{self.name}: layer chain mismatch {a.name} "
-                    f"({a.out_h},{a.out_w},{a.out_c}) -> {b.name} "
-                    f"({b.in_h},{b.in_w},{b.in_c})")
+                    f"{self.name}: {l.name} ({l.conv_t.name}) has fan-in "
+                    f"{len(ins)}; only ADD/CONCAT layers may merge")
+            if l.conv_t == ConvT.ADD and len(ins) >= 2:
+                for j in ins:
+                    if pshape(j) != (l.in_h, l.in_w, l.in_c):
+                        ph, pw, pc = pshape(j)
+                        raise ValueError(
+                            f"{self.name}: ADD {l.name} input {pname(j)} "
+                            f"({ph},{pw},{pc}) != "
+                            f"({l.in_h},{l.in_w},{l.in_c})")
+                if l.out_c != l.in_c:
+                    raise ValueError(f"{self.name}: ADD {l.name} must "
+                                     f"preserve channels")
+            elif l.conv_t == ConvT.CONCAT and len(ins) >= 2:
+                for j in ins:
+                    if pshape(j)[:2] != (l.in_h, l.in_w):
+                        ph, pw, _ = pshape(j)
+                        raise ValueError(
+                            f"{self.name}: CONCAT {l.name} input "
+                            f"{pname(j)} ({ph},{pw}) != "
+                            f"({l.in_h},{l.in_w})")
+                csum = sum(pshape(j)[2] for j in ins)
+                if csum != l.in_c or l.out_c != l.in_c:
+                    raise ValueError(
+                        f"{self.name}: CONCAT {l.name} channels {csum} != "
+                        f"in_c {l.in_c} (out_c {l.out_c})")
+            elif i > 0 or ins[0] >= 0:
+                ph, pw, pc = pshape(ins[0])
+                if (ph, pw) != (l.in_h, l.in_w) or pc != l.in_c:
+                    raise ValueError(
+                        f"{self.name}: layer chain mismatch {pname(ins[0])} "
+                        f"({ph},{pw},{pc}) -> {l.name} "
+                        f"({l.in_h},{l.in_w},{l.in_c})")
+        if not self.is_chain and self.layers:
+            sinks = [i for i in range(len(self.layers))
+                     if not self.consumer_ids[i]]
+            if len(sinks) != 1 or sinks[0] != len(self.layers) - 1:
+                raise ValueError(
+                    f"{self.name}: branched graph must have exactly one "
+                    f"output layer, placed last (sinks: "
+                    f"{[self.layers[i].name for i in sinks]})")
+
+    @functools.cached_property
+    def _branches(self) -> Tuple[Branch, ...]:
+        prods, cons = self.producer_ids, self.consumer_ids
+        branch_of: Dict[int, int] = {}
+        chains: List[List[int]] = []
+        for i in range(len(self.layers)):
+            p = prods[i]
+            extend = (len(p) == 1 and p[0] >= 0 and len(cons[p[0]]) == 1)
+            if extend:
+                bi = branch_of[p[0]]
+                chains[bi].append(i)
+            else:
+                bi = len(chains)
+                chains.append([i])
+            branch_of[i] = bi
+        return tuple(Branch(tuple(c)) for c in chains)
+
+    def linearize(self) -> Tuple[Branch, ...]:
+        """Decompose the DAG into chain branches cut at every fork output
+        and merge input.  Branches are returned in topological order (head
+        index ascending); every cross-branch producer is a branch tail."""
+        return self._branches
 
     def __len__(self) -> int:
         return len(self.layers)
@@ -140,7 +333,9 @@ def halo_growth(layers: Sequence[LayerSpec], upto: int) -> List[int]:
     compute, given layers ``m+1..upto`` are fused after it.  ``halo[upto] = 0``.
     Standard receptive-field recurrence, applied backwards:
         need[m] = need[m+1] * S_{m+1} + (K_{m+1} - 1)   (in layer-m output rows)
-    For FC/ADD layers K=S=1 so the halo never grows through them.
+    For FC/ADD/CONCAT layers K=S=1 so the halo never grows through them.
+    ``layers`` is a chain (one branch of the DAG); NT fusion never crosses
+    fork/merge junctions, so the recurrence stays 1-D.
     """
     n = upto + 1
     halo = [0] * n
@@ -150,5 +345,22 @@ def halo_growth(layers: Sequence[LayerSpec], upto: int) -> List[int]:
     return halo
 
 
-def chain(name: str, specs: Sequence[LayerSpec]) -> ModelGraph:
+def chain(name: str, specs: Sequence[LayerSpec],
+          drop_edges: bool = False) -> ModelGraph:
+    """Chain-compat constructor: each layer consumes the previous one.
+
+    Layers carrying explicit ``inputs`` edges are rejected — silently
+    re-chaining them would build a semantically different model (residual
+    ADDs degrade to the identity).  Pass ``drop_edges=True`` to strip the
+    edges on purpose (e.g. to compare a DAG against its chain skeleton).
+    """
+    if any(l.inputs for l in specs):
+        if not drop_edges:
+            bad = [l.name for l in specs if l.inputs]
+            raise ValueError(
+                f"{name}: layers {bad} carry DAG input edges; build a "
+                f"ModelGraph directly, or pass drop_edges=True to chain() "
+                f"to deliberately discard them")
+        specs = tuple(dataclasses.replace(l, inputs=()) if l.inputs else l
+                      for l in specs)
     return ModelGraph(name=name, layers=tuple(specs))

@@ -83,7 +83,9 @@ def _conv_row_flops(layer: LayerSpec, out_rows: int, out_cols: int,
     elif layer.conv_t == ConvT.FC:
         # FC: "rows" = sequence positions, cols = 1
         per = 2.0 * layer.in_c
-    else:  # ADD
+    elif layer.conv_t == ConvT.ADD:
+        per = float(max(1, layer.fan_in - 1))   # (fan_in - 1) adds per elem
+    else:  # CONCAT: copy cost
         per = 1.0
     return per * out_rows * out_cols * out_ch * layer.extra_flop_factor
 
@@ -160,8 +162,8 @@ def boundary_bytes_same_scheme(layer: LayerSpec, nxt: LayerSpec,
     feature map, both directions.  Returns the *per-busiest-node* byte count
     (what the latency-dominant node sends+receives)."""
     halo = max(nxt.k - 1, 0)
-    if halo == 0:
-        return 0.0
+    if halo == 0 or nodes <= 1:
+        return 0.0   # K=1 (FC/ADD/CONCAT/pointwise) or a single node: no halo
     oh, ow, oc = layer.out_h, layer.out_w, layer.out_c
     if scheme == Scheme.INH:
         return 2.0 * halo * ow * oc * DTYPE_BYTES        # two neighbours

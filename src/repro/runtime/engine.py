@@ -9,21 +9,28 @@ did not own — the measured communication), then runs the whole segment
 locally.  This exercises the paper's core mechanics end to end: halo
 growth, redundant computation, scheme-dependent re-layout.
 
-Correctness contract (tested): for ANY valid plan, the reassembled output
-is identical to the unpartitioned reference inference.
+Branched graphs execute branch by branch (``ModelGraph.linearize()``):
+every branch is a chain run through the same segment machinery, fork
+outputs are read by each consuming branch, and merge layers (ADD/CONCAT)
+reassemble their incoming branch shards at a forced sync point before the
+next branch continues.
+
+Correctness contract (tested): for ANY valid plan — chain or DAG — the
+reassembled output is identical to the unpartitioned reference inference.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import ConvT, LayerSpec, ModelGraph
-from repro.core.partition import Mode, Scheme, grid_dims, split_sizes
-from repro.core.plan import Plan
+from repro.core.partition import (DTYPE_BYTES, Mode, Scheme, grid_dims,
+                                  split_sizes)
+from repro.core.plan import Plan, steps_segments
 
 Rect = Tuple[Tuple[int, int], Tuple[int, int], Tuple[int, int]]
 
@@ -76,15 +83,38 @@ def _conv_region(l: LayerSpec, w, x: jnp.ndarray, pads) -> jnp.ndarray:
     if l.conv_t == ConvT.FC:
         return (x.reshape(x.shape[0], x.shape[-1]) @ w).reshape(
             x.shape[0], 1, -1)
-    if l.conv_t == ConvT.ADD:
-        return x
+    if l.conv_t in (ConvT.ADD, ConvT.CONCAT):
+        return x   # single-input (chain-compat) merge is the identity
     raise ValueError(l.conv_t)
 
 
+def merge_tensors(l: LayerSpec, inputs: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Combine the producer tensors of a multi-input merge layer."""
+    if len(inputs) == 1:
+        return inputs[0]
+    if l.conv_t == ConvT.ADD:
+        out = inputs[0]
+        for t in inputs[1:]:
+            out = out + t
+        return out
+    if l.conv_t == ConvT.CONCAT:
+        return jnp.concatenate(list(inputs), axis=-1)
+    raise ValueError(f"{l.name}: only ADD/CONCAT layers can merge")
+
+
 def run_reference(graph: ModelGraph, weights, x: jnp.ndarray) -> jnp.ndarray:
-    for l, w in zip(graph.layers, weights):
-        x = apply_layer(l, w, x)
-    return x
+    if graph.is_chain:
+        for l, w in zip(graph.layers, weights):
+            x = apply_layer(l, w, x)
+        return x
+    outs: Dict[int, jnp.ndarray] = {-1: x}
+    for i, (l, w) in enumerate(zip(graph.layers, weights)):
+        prods = graph.producer_ids[i]
+        if len(prods) >= 2:
+            outs[i] = merge_tensors(l, [outs[p] for p in prods])
+        else:
+            outs[i] = apply_layer(l, w, outs[prods[0]])
+    return outs[len(graph) - 1]
 
 
 # ---------------------------------------------------------------------------
@@ -129,8 +159,8 @@ def exact_regions(l: LayerSpec, scheme: Scheme,
 def in_rows(l: LayerSpec, out_r: Tuple[int, int], dim: int
             ) -> Tuple[int, int]:
     """Unclipped input range needed for an output range along H (dim=0,
-    bound l.in_h) or W (dim=1, bound l.in_w).  FC/ADD are 1:1."""
-    if l.conv_t in (ConvT.FC, ConvT.ADD):
+    bound l.in_h) or W (dim=1, bound l.in_w).  FC/ADD/CONCAT are 1:1."""
+    if l.conv_t in (ConvT.FC, ConvT.ADD, ConvT.CONCAT):
         return out_r
     r0 = out_r[0] * l.s - l.p
     r1 = (out_r[1] - 1) * l.s - l.p + l.k
@@ -162,16 +192,21 @@ def _rect_isect(a: Rect, b: Rect) -> Rect:
                  for x, y in zip(a, b))  # type: ignore[return-value]
 
 
-def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
-                    nodes: int) -> Tuple[jnp.ndarray, ExecStats]:
-    plan.validate()
-    stats = ExecStats()
-    layers = graph.layers
+def _run_branch(layers: Sequence[LayerSpec],
+                weights: Sequence,
+                steps: Sequence[Tuple[Scheme, Mode]],
+                x: jnp.ndarray,
+                owned: Optional[List[List[Rect]]],
+                nodes: int,
+                stats: ExecStats
+                ) -> Tuple[jnp.ndarray, List[List[Rect]]]:
+    """Execute one chain of layers segment by segment.  ``x`` is the full
+    input tensor at the branch entry; ``owned`` is the per-node layout it is
+    distributed in (None = initial input, no comm accounting).  Returns the
+    full output and its per-node layout at the final T boundary."""
     full = x
-    owned: Optional[List[List[Rect]]] = None  # per-node layout (prev sync)
-
-    for (a, b) in plan.segments():
-        scheme = plan.steps[a][0]
+    for (a, b) in steps_segments(steps):
+        scheme = steps[a][0]
         l_in = layers[a]
         regs_b = exact_regions(layers[b], scheme, nodes)
         cell_out: List[Tuple[Rect, jnp.ndarray]] = []
@@ -194,7 +229,7 @@ def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
                 if owned is not None:
                     held = sum(_rect_elems(_rect_isect(in_rect, o))
                                for o in owned[n])
-                    stats.bytes_received += 4.0 * (
+                    stats.bytes_received += DTYPE_BYTES * (
                         _rect_elems(in_rect) - held)
                 node_x = full[in_r[0]:in_r[1], in_c[0]:in_c[1], :]
                 origin = (in_r[0], in_c[0])
@@ -215,7 +250,89 @@ def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
         stats.redundant_elems += float(computed)
         owned = regs_b
         full = rebuilt
-    return full, stats
+    assert owned is not None, "branch must contain at least one segment"
+    return full, owned
+
+
+def _merge_comm_bytes(l: LayerSpec, prods: Sequence[int],
+                      prod_channels: Sequence[int],
+                      owned_map: Dict[int, Optional[List[List[Rect]]]],
+                      regs: List[List[Rect]]) -> float:
+    """Bytes every node must receive to assemble its merge-output regions
+    from the producers' shard layouts.  CONCAT maps output-channel windows
+    back into each producer's channel range (``prod_channels`` includes the
+    graph input's channels, keeping later windows aligned); ADD needs the
+    same region of every input."""
+    offsets: List[int] = []
+    off = 0
+    for c in prod_channels:
+        offsets.append(off)
+        off += c if l.conv_t == ConvT.CONCAT else 0
+    total = 0.0
+    for n, cells in enumerate(regs):
+        for (rows, cols, chans) in cells:
+            for j, pid in enumerate(prods):
+                if l.conv_t == ConvT.CONCAT:
+                    c0 = max(chans[0] - offsets[j], 0)
+                    c1 = min(chans[1] - offsets[j], prod_channels[j])
+                    if c1 <= c0:
+                        continue
+                    need: Rect = (rows, cols, (c0, c1))
+                else:
+                    need = (rows, cols, chans)
+                owned = owned_map.get(pid)
+                if owned is None:
+                    continue   # graph input: pre-distributed, not counted
+                held = sum(_rect_elems(_rect_isect(need, o))
+                           for o in owned[n])
+                total += DTYPE_BYTES * (_rect_elems(need) - held)
+    return total
+
+
+def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
+                    nodes: int) -> Tuple[jnp.ndarray, ExecStats]:
+    stats = ExecStats()
+    if graph.is_chain:
+        plan.validate()
+        if len(plan) != len(graph):
+            raise ValueError("plan/graph length mismatch")
+        full, _ = _run_branch(graph.layers, weights, plan.steps, x, None,
+                              nodes, stats)
+        return full, stats
+
+    plan.validate_for(graph)
+    layers = graph.layers
+    outs: Dict[int, jnp.ndarray] = {-1: x}
+    owned_map: Dict[int, Optional[List[List[Rect]]]] = {-1: None}
+    for br in graph.linearize():
+        ids = list(br.ids)
+        head = ids[0]
+        prods = graph.producer_ids[head]
+        if len(prods) >= 2:
+            l_m = layers[head]
+            q = plan.steps[head][0]
+            merged = merge_tensors(l_m, [outs[p] for p in prods])
+            regs = exact_regions(l_m, q, nodes)
+            stats.sync_points += 1
+            stats.bytes_received += _merge_comm_bytes(
+                l_m, prods,
+                [layers[p].out_c if p >= 0 else layers[0].in_c
+                 for p in prods],
+                owned_map, regs)
+            cur, owned = merged, regs
+            rest = ids[1:]
+        else:
+            src = prods[0]
+            cur, owned = outs[src], owned_map[src]
+            rest = ids
+        if rest:
+            ls = [layers[i] for i in rest]
+            ws = [weights[i] for i in rest]
+            st = [plan.steps[i] for i in rest]
+            cur, owned = _run_branch(ls, ws, st, cur, owned, nodes, stats)
+        outs[ids[-1]] = cur
+        owned_map[ids[-1]] = owned
+    return outs[len(graph) - 1], stats
 
 
 def _apply_local(l: LayerSpec, w, x_local: jnp.ndarray,
@@ -228,7 +345,7 @@ def _apply_local(l: LayerSpec, w, x_local: jnp.ndarray,
         # local rows already correspond to rows (1:1 chain)
         return (seg @ w[:, chans[0]:chans[1]]).reshape(
             x_local.shape[0], 1, chans[1] - chans[0])
-    if l.conv_t == ConvT.ADD:
+    if l.conv_t in (ConvT.ADD, ConvT.CONCAT):
         return x_local[:, :, chans[0]:chans[1]]
     # needed (unclipped) input range for this output region
     nr = in_rows(l, rows, 0)

@@ -32,8 +32,8 @@ class TraceConfig:
 
 
 def _random_layer(rng: np.random.Generator) -> LayerSpec:
-    t = ConvT(rng.choice([0, 1, 2, 3, 4, 5],
-                         p=[0.35, 0.15, 0.25, 0.08, 0.12, 0.05]))
+    t = ConvT(rng.choice([0, 1, 2, 3, 4, 5, 6],
+                         p=[0.33, 0.14, 0.24, 0.08, 0.11, 0.05, 0.05]))
     if t == ConvT.FC:
         seq = int(rng.choice([1, 64, 128, 256, 512]))
         return LayerSpec("t", t, seq, 1, int(rng.choice([256, 512, 768, 1024,
@@ -47,8 +47,13 @@ def _random_layer(rng: np.random.Generator) -> LayerSpec:
         cout, k, s, p = int(rng.choice([16, 32, 64, 128, 256, 512, 1024])), 1, 1, 0
     elif t == ConvT.POOL:
         cout, k, s, p = cin, int(rng.choice([2, 3])), 2, 0
-    elif t == ConvT.ADD:
+    elif t in (ConvT.ADD, ConvT.CONCAT):
+        # multi-input merge: the fan-in feature comes from len(inputs);
+        # the dummy producer names never resolve (features only)
+        fan = int(rng.integers(2, 5))
         cout, k, s, p = cin, 1, 1, 0
+        return LayerSpec("t", t, h, h, cin, cout, k, s, p,
+                         inputs=tuple(f"in{j}" for j in range(fan)))
     else:
         cout = int(rng.choice([16, 32, 64, 128, 256, 512]))
         k = int(rng.choice([3, 5, 7]))

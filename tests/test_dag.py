@@ -1,0 +1,272 @@
+"""DAG IR: validation, branch decomposition, Theorem-1 on branched graphs,
+and exact engine reassembly through fork/merge topologies."""
+import random
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ALL_SCHEMES, AnalyticEstimator, ConvT, LayerSpec,
+                        Mode, ModelGraph, Scheme, Testbed, Topology, chain,
+                        fixed_plan, plan_cost, plan_feasible, plan_search)
+from repro.core.estimator import (I_FEATURE_NAMES, S_FEATURE_NAMES,
+                                  i_features, s_features)
+from repro.core.exhaustive import enumerate_dag_plans, exhaustive_search
+from repro.core.plan import dag_plan_cost
+from repro.runtime.engine import (init_weights, run_partitioned,
+                                  run_reference)
+
+EST = AnalyticEstimator()
+
+
+def _resnet_block_dag(h=16):
+    """conv -> [conv, conv] + identity skip -> ADD -> conv."""
+    return ModelGraph(name="rb", layers=(
+        LayerSpec("c0", ConvT.CONV, h, h, 3, 8, 3, 1, 1),
+        LayerSpec("ba", ConvT.CONV, h, h, 8, 8, 3, 1, 1, inputs=("c0",)),
+        LayerSpec("bb", ConvT.CONV, h, h, 8, 8, 3, 1, 1, inputs=("ba",)),
+        LayerSpec("add", ConvT.ADD, h, h, 8, 8, inputs=("bb", "c0")),
+        LayerSpec("c1", ConvT.CONV, h, h, 8, 8, 3, 1, 1),
+    ))
+
+
+def _inception_dag(h=16):
+    """stem -> {1x1, 1x1->3x3, pool} -> CONCAT -> head."""
+    return ModelGraph(name="inc", layers=(
+        LayerSpec("stem", ConvT.CONV, h, h, 3, 8, 3, 1, 1),
+        LayerSpec("b1", ConvT.POINTWISE, h, h, 8, 4, 1, 1, 0,
+                  inputs=("stem",)),
+        LayerSpec("b2a", ConvT.POINTWISE, h, h, 8, 4, 1, 1, 0,
+                  inputs=("stem",)),
+        LayerSpec("b2b", ConvT.CONV, h, h, 4, 8, 3, 1, 1, inputs=("b2a",)),
+        LayerSpec("b3", ConvT.POOL, h, h, 8, 8, 3, 1, 1, inputs=("stem",)),
+        LayerSpec("cat", ConvT.CONCAT, h, h, 20, 20,
+                  inputs=("b1", "b2b", "b3")),
+        LayerSpec("head", ConvT.CONV, h, h, 20, 8, 3, 1, 1),
+    ))
+
+
+DAGS = {"resnet_block": _resnet_block_dag, "inception": _inception_dag}
+
+
+# ---------------------------------------------------------------------------
+# IR structure & validation
+# ---------------------------------------------------------------------------
+
+def test_chain_graphs_stay_chains():
+    g = chain("c", [
+        LayerSpec("a", ConvT.CONV, 8, 8, 3, 4, 3, 1, 1),
+        LayerSpec("b", ConvT.CONV, 8, 8, 4, 4, 3, 1, 1),
+    ])
+    assert g.is_chain
+    assert [br.ids for br in g.linearize()] == [(0, 1)]
+    assert g.producer_ids == ((-1,), (0,))
+
+
+def test_linearize_resnet_block():
+    g = _resnet_block_dag()
+    assert not g.is_chain
+    assert [br.ids for br in g.linearize()] == [(0,), (1, 2), (3, 4)]
+    assert g.fan_out(0) == 2 and g.fan_in(3) == 2
+
+
+def test_linearize_inception():
+    g = _inception_dag()
+    assert [br.ids for br in g.linearize()] == [(0,), (1,), (2, 3), (4,),
+                                                (5, 6)]
+    assert g.fan_in(5) == 3
+
+
+def test_dag_validation_rejects_bad_shapes():
+    with pytest.raises(ValueError):   # ADD input channel mismatch
+        ModelGraph(name="bad", layers=(
+            LayerSpec("a", ConvT.CONV, 8, 8, 3, 4, 3, 1, 1),
+            LayerSpec("b", ConvT.CONV, 8, 8, 4, 8, 3, 1, 1, inputs=("a",)),
+            LayerSpec("add", ConvT.ADD, 8, 8, 8, 8, inputs=("b", "a")),
+        ))
+    with pytest.raises(ValueError):   # CONCAT channel sum mismatch
+        ModelGraph(name="bad", layers=(
+            LayerSpec("a", ConvT.CONV, 8, 8, 3, 4, 3, 1, 1),
+            LayerSpec("b", ConvT.CONV, 8, 8, 4, 4, 3, 1, 1, inputs=("a",)),
+            LayerSpec("cat", ConvT.CONCAT, 8, 8, 12, 12, inputs=("b", "a")),
+        ))
+    with pytest.raises(ValueError):   # unknown producer
+        ModelGraph(name="bad", layers=(
+            LayerSpec("a", ConvT.CONV, 8, 8, 3, 4, 3, 1, 1),
+            LayerSpec("b", ConvT.CONV, 8, 8, 4, 4, 3, 1, 1, inputs=("zz",)),
+        ))
+    with pytest.raises(ValueError):   # fan-in >= 2 on a non-merge layer
+        ModelGraph(name="bad", layers=(
+            LayerSpec("a", ConvT.CONV, 8, 8, 3, 4, 3, 1, 1),
+            LayerSpec("b", ConvT.CONV, 8, 8, 4, 4, 3, 1, 1, inputs=("a",)),
+            LayerSpec("c", ConvT.CONV, 8, 8, 4, 4, 3, 1, 1,
+                      inputs=("a", "b")),
+        ))
+
+
+def test_merge_consuming_graph_input_validates_and_runs():
+    """@input is a first-class producer: its shape (layer 0's input) counts
+    in merge validation, and the engine executes the two-tower exactly."""
+    from repro.core import GRAPH_INPUT
+    with pytest.raises(ValueError):   # 8 + 3 input channels != declared 8
+        ModelGraph(name="bad", layers=(
+            LayerSpec("c0", ConvT.CONV, 8, 8, 3, 8, 3, 1, 1),
+            LayerSpec("cat", ConvT.CONCAT, 8, 8, 8, 8,
+                      inputs=("c0", GRAPH_INPUT)),
+        ))
+    g = ModelGraph(name="tower", layers=(
+        LayerSpec("c0", ConvT.CONV, 8, 8, 3, 8, 3, 1, 1),
+        LayerSpec("cat", ConvT.CONCAT, 8, 8, 11, 11,
+                  inputs=("c0", GRAPH_INPUT)),
+        LayerSpec("head", ConvT.CONV, 8, 8, 11, 4, 3, 1, 1),
+    ))
+    key = jax.random.PRNGKey(3)
+    ws = init_weights(g, key)
+    x = jax.random.normal(key, (8, 8, 3))
+    ref = run_reference(g, ws, x)
+    for scheme in ALL_SCHEMES:
+        out, _ = run_partitioned(g, ws, x, fixed_plan(g, scheme), 3)
+        assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+
+
+def test_dag_plan_validation_forces_junction_sync():
+    g = _resnet_block_dag()
+    steps = [(Scheme.INH, Mode.T)] * len(g)
+    steps[0] = (Scheme.INH, Mode.NT)   # fork layer fused -> invalid
+    from repro.core.plan import Plan
+    with pytest.raises(ValueError):
+        Plan(tuple(steps)).validate_for(g)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 extended to DAGs: DPP == exhaustive oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", sorted(DAGS))
+@pytest.mark.parametrize("seed", range(4))
+def test_dag_dpp_matches_exhaustive(model, seed):
+    rng = random.Random(seed)
+    g = DAGS[model]()
+    tb = Testbed(nodes=rng.choice([3, 4, 5]),
+                 bandwidth_gbps=rng.choice([0.5, 1.0, 5.0]),
+                 topology=Topology(rng.randint(0, 2)))
+    _, best = exhaustive_search(g, EST, tb)
+    res = plan_search(g, EST, tb)
+    assert res.cost == pytest.approx(best, rel=1e-12)
+    # the returned plan's independently-evaluated cost equals the DP value
+    assert plan_cost(g, res.plan, EST, tb) == pytest.approx(res.cost,
+                                                            rel=1e-9)
+    assert plan_feasible(g, res.plan, tb.nodes)
+
+
+def test_dag_cost_reduces_to_chain_cost():
+    """On a single-branch graph the DAG semantics equal the chain ones."""
+    layers = (
+        LayerSpec("a", ConvT.CONV, 16, 16, 3, 8, 3, 1, 1),
+        LayerSpec("b", ConvT.DWCONV, 16, 16, 8, 8, 3, 1, 1),
+        LayerSpec("c", ConvT.POINTWISE, 16, 16, 8, 16, 1, 1, 0),
+    )
+    g = chain("c3", layers)
+    tb = Testbed(nodes=4)
+    for plan in [fixed_plan(g, s) for s in ALL_SCHEMES]:
+        assert dag_plan_cost(g, plan, EST, tb) == pytest.approx(
+            plan_cost(g, plan, EST, tb), rel=1e-12)
+
+
+def test_dag_flexpie_dominates_fixed_schemes():
+    for model in sorted(DAGS):
+        g = DAGS[model]()
+        tb = Testbed(nodes=4, bandwidth_gbps=1.0)
+        flex = plan_search(g, EST, tb).cost
+        for s in ALL_SCHEMES:
+            assert flex <= plan_cost(g, fixed_plan(g, s), EST, tb) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Engine: exact reassembly through branches
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module", params=sorted(DAGS))
+def dag_setup(request):
+    g = DAGS[request.param]()
+    key = jax.random.PRNGKey(0)
+    ws = init_weights(g, key)
+    x = jax.random.normal(key, (16, 16, 3))
+    return g, ws, x, run_reference(g, ws, x)
+
+
+@pytest.mark.parametrize("nodes", [3, 4, 5])
+@pytest.mark.parametrize("scheme", list(ALL_SCHEMES))
+def test_dag_fixed_schemes_exact(dag_setup, nodes, scheme):
+    g, ws, x, ref = dag_setup
+    out, _ = run_partitioned(g, ws, x, fixed_plan(g, scheme), nodes)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+
+
+@pytest.mark.parametrize("nodes", [3, 4])
+@pytest.mark.parametrize("bw", [0.5, 5.0])
+def test_dag_flexpie_plans_exact(dag_setup, nodes, bw):
+    g, ws, x, ref = dag_setup
+    plan = plan_search(g, EST, Testbed(nodes=nodes, bandwidth_gbps=bw)).plan
+    out, stats = run_partitioned(g, ws, x, plan, nodes)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+    assert stats.sync_points >= len(g.linearize())
+
+
+def test_dag_random_valid_plans_exact(dag_setup):
+    """Theorem-1 reassembly property: EVERY valid branched plan is exact."""
+    g, ws, x, ref = dag_setup
+    rng = random.Random(0)
+    plans = [p for p in enumerate_dag_plans(g) if plan_feasible(g, p, 4)]
+    rng.shuffle(plans)
+    for plan in plans[:12]:
+        out, _ = run_partitioned(g, ws, x, plan, 4)
+        assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+
+
+def test_dag_add_actually_adds():
+    """The residual edge is real: zeroing the skip branch changes output."""
+    g = _resnet_block_dag()
+    key = jax.random.PRNGKey(1)
+    ws = init_weights(g, key)
+    x = jax.random.normal(key, (16, 16, 3))
+    ref = run_reference(g, ws, x)
+    # same layers with the skip deliberately dropped: must differ
+    with pytest.raises(ValueError):
+        chain("rb_chain", g.layers)   # silent edge-stripping is rejected
+    g_chain = chain("rb_chain", g.layers, drop_edges=True)
+    ref_chain = run_reference(g_chain, ws, x)
+    assert float(jnp.max(jnp.abs(ref - ref_chain))) > 1e-3
+
+
+def test_resnet18_slice_executes_exactly():
+    """A real branched benchmark prefix stays exact under the planner."""
+    from repro.configs.edge_models import resnet18
+    g_full = resnet18(width=32)
+    ids = range(0, 8)   # conv1, maxpool, b0(a,b,+), b1(a,b,+)
+    sub = ModelGraph(name="r18_prefix",
+                     layers=tuple(g_full.layers[i] for i in ids))
+    key = jax.random.PRNGKey(2)
+    ws = init_weights(sub, key)
+    x = jax.random.normal(key, (32, 32, 3))
+    ref = run_reference(sub, ws, x)
+    plan = plan_search(sub, EST, Testbed(nodes=4, bandwidth_gbps=0.5)).plan
+    out, _ = run_partitioned(sub, ws, x, plan, 4)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Feature expression (satellite: docstring/feature-dim contract)
+# ---------------------------------------------------------------------------
+
+def test_feature_vector_matches_estimator_names():
+    l = LayerSpec("add", ConvT.ADD, 8, 8, 4, 4, inputs=("a", "b", "c"))
+    tb = Testbed()
+    assert len(i_features(l, Scheme.INH, tb, 0)) == len(I_FEATURE_NAMES)
+    assert len(s_features(l, l, Scheme.INH, Scheme.INW, tb)) == \
+        len(S_FEATURE_NAMES)
+    # fan-in is a real feature: merge structure is visible to the GBDTs
+    fi = I_FEATURE_NAMES.index("FanIn")
+    assert i_features(l, Scheme.INH, tb, 0)[fi] == 3.0
+    l1 = LayerSpec("conv", ConvT.CONV, 8, 8, 4, 4, 3, 1, 1)
+    assert i_features(l1, Scheme.INH, tb, 0)[fi] == 1.0

@@ -2,7 +2,6 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (ALL_SCHEMES, AnalyticEstimator, Testbed, Topology,
                         chain, plan_cost, plan_search)

@@ -1,0 +1,60 @@
+"""Partition-geometry edge cases (no hypothesis needed).
+
+Covers the degenerate single-node cluster, halo-free K=1 layers (ADD/FC),
+and the paper's 3-node 2D-grid round-robin imbalance observation.
+"""
+import pytest
+
+from repro.core.graph import ConvT, LayerSpec
+from repro.core.partition import (ALL_SCHEMES, Scheme,
+                                  boundary_bytes_same_scheme, grid_dims,
+                                  relayout_bytes, shard_work)
+
+
+def _conv(h=28, c=16, k=3):
+    return LayerSpec("c", ConvT.CONV, h, h, c, c, k, 1, k // 2)
+
+
+def test_single_node_has_zero_comm():
+    l, nxt = _conv(), _conv()
+    for src in ALL_SCHEMES:
+        for dst in ALL_SCHEMES:
+            assert relayout_bytes(l, src, dst, nodes=1) == 0.0
+    for s in (Scheme.INH, Scheme.INW, Scheme.GRID2D):
+        assert boundary_bytes_same_scheme(l, nxt, s, nodes=1) == 0.0
+
+
+def test_k1_layers_need_no_halo_exchange():
+    """ADD and FC have K=1: a same-scheme T boundary moves zero bytes."""
+    prev = _conv()
+    add = LayerSpec("add", ConvT.ADD, 28, 28, 16, 16, inputs=("a", "b"))
+    fc = LayerSpec("fc", ConvT.FC, 28, 1, 16, 10)
+    for s in (Scheme.INH, Scheme.INW, Scheme.GRID2D):
+        assert boundary_bytes_same_scheme(prev, add, s, nodes=4) == 0.0
+        assert boundary_bytes_same_scheme(prev, fc, s, nodes=4) == 0.0
+    # and their shard workloads carry no halo notion: exact split only
+    w = shard_work(add, Scheme.INH, 4)
+    assert sum(w.flops_per_node) == pytest.approx(add.flops(), rel=1e-9)
+
+
+def test_grid_3_nodes_round_robin_imbalance():
+    """grid_dims(3) -> 2x2 cells round-robined onto 3 nodes: one node owns
+    two cells and carries ~2x the per-cell work (paper's 3-node case)."""
+    assert grid_dims(3) == (2, 2)
+    l = _conv(h=28)
+    w = shard_work(l, Scheme.GRID2D, 3)
+    assert len(w.flops_per_node) == 3
+    assert sum(w.flops_per_node) == pytest.approx(l.flops(), rel=1e-9)
+    # node 0 owns cells 0 and 3 -> twice the work of the single-cell nodes
+    assert w.imbalance == pytest.approx(1.5, rel=0.05)
+    assert max(w.flops_per_node) == pytest.approx(
+        2 * min(w.flops_per_node), rel=0.05)
+
+
+def test_relayout_outc_destination_costliest():
+    """Gather-to-full for an OutC consumer dominates spatial re-shards."""
+    l = _conv()
+    to_outc = relayout_bytes(l, Scheme.INH, Scheme.OUTC, 4)
+    spatial = relayout_bytes(l, Scheme.INH, Scheme.INW, 4)
+    assert to_outc > spatial > 0.0
+    assert relayout_bytes(l, Scheme.INH, Scheme.INH, 4) == 0.0

@@ -2,7 +2,9 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # property tests only; see pyproject [dev]
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.graph import ConvT, LayerSpec, halo_growth
 from repro.core.partition import (ALL_SCHEMES, Scheme, grid_dims,

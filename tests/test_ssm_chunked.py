@@ -10,7 +10,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # property tests only; see pyproject [dev]
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import ModelConfig, SSMConfig
 from repro.models import ssm as S
