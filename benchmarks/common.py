@@ -22,3 +22,15 @@ def time_call(fn: Callable, repeats: int = 3) -> Tuple[float, object]:
 
 def emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+def json_arg(argv, default: str = "BENCH_search.json"):
+    """Parse an optional ``--json [PATH]`` flag (shared by run.py and
+    search_time's CLI).  Returns None when absent, ``default`` when the
+    flag has no value (or the next token is another flag)."""
+    if "--json" not in argv:
+        return None
+    i = argv.index("--json")
+    if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
+        return argv[i + 1]
+    return default

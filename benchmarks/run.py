@@ -1,10 +1,16 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# ``--json [PATH]`` additionally writes the search-time records to
+# BENCH_search.json (default) for the CI perf-trajectory artifact.
 from __future__ import annotations
 
 import sys
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    from .common import json_arg
+    json_path = json_arg(argv)
+
     from . import (engine_comm, estimator_quality, fig2_microbench,
                    fig7_fig9_comparison, fig8_score, roofline_table,
                    search_time, tpu_ce)
@@ -13,7 +19,7 @@ def main() -> None:
     fig7_fig9_comparison.run(4, "fig7")
     fig7_fig9_comparison.run(3, "fig9")
     fig8_score.run()
-    search_time.run()
+    search_time.run(json_path=json_path)
     engine_comm.run()
     # data-driven CE: small trace budget by default (full 330K via
     # benchmarks.estimator_quality --full)

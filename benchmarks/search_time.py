@@ -1,29 +1,92 @@
-"""§4 metric — DPP search time and estimator-call counts per benchmark
-model, plus optimality confirmation vs exhaustive search on a small graph."""
+"""§4 metric — DPP search time per benchmark model, batched vs the scalar
+reference, for both estimators, plus optimality confirmation vs exhaustive
+search on a small graph.
+
+``run(json_path=...)`` additionally writes ``BENCH_search.json`` with the
+per-model search microseconds, estimator row/call counts and speedups, so
+CI can track the planner's perf trajectory across PRs.  The harness
+*asserts* (a) batched == reference plan and cost on every model and (b)
+DP matches the exhaustive optimum — a benchmark that silently drifted
+away from exactness would be meaningless.
+"""
 from __future__ import annotations
 
+import json
 import random
+import sys
 
-from repro.core import Testbed
-from repro.core.dpp import plan_search
+from repro.core import GBDTEstimator, Testbed
+from repro.core.dpp import plan_search, plan_search_reference
 from repro.core.exhaustive import exhaustive_search
 from repro.core.graph import ConvT, LayerSpec, chain
 from repro.configs.edge_models import EDGE_MODELS
+from repro.sim import TraceConfig, train_estimators
 
-from .common import EST, emit, time_call
+from .common import EST, emit, json_arg, time_call
+
+#: trace/tree budget for the in-benchmark GBDT (small on purpose: the
+#: speedup under test is planner call overhead, not model quality)
+_GBDT_SAMPLES = 2500
+_GBDT_TREES = 40
 
 
-def run() -> None:
+def _bench_model(model: str, g, est_batched, make_ref_est, tb) -> dict:
+    # same best-of-3 policy on both sides so the speedup is comparable;
+    # make_ref_est() runs inside the timed call on purpose — a fresh
+    # estimator per repeat keeps the reference's scalar caches cold
+    us_b, res = time_call(lambda: plan_search(g, est_batched, tb))
+    us_r, ref = time_call(
+        lambda: plan_search_reference(g, make_ref_est(), tb))
+    match = res.plan == ref.plan and res.cost == ref.cost
+    assert match, (f"{model}: batched plan_search diverged from reference "
+                   f"(costs {res.cost} vs {ref.cost})")
+    return {
+        "layers": len(g),
+        "batched_us": round(us_b, 1),
+        "reference_us": round(us_r, 1),
+        "speedup": round(us_r / max(us_b, 1e-9), 2),
+        "match": match,
+        "i_rows": res.stats.i_calls,
+        "s_rows": res.stats.s_calls,
+        "ref_i_calls": ref.stats.i_calls,
+        "ref_s_calls": ref.stats.s_calls,
+    }
+
+
+def run(json_path: str | None = None) -> dict:
     tb = Testbed(nodes=4, bandwidth_gbps=1.0)
+    out: dict = {"testbed": {"nodes": tb.nodes,
+                             "bandwidth_gbps": tb.bandwidth_gbps},
+                 "gbdt": {"n_samples": _GBDT_SAMPLES, "trees": _GBDT_TREES},
+                 "models": {}}
+
     for model, fn in EDGE_MODELS.items():
         g = fn()
-        us, res = time_call(lambda: plan_search(g, EST, tb))
-        emit(f"search/{model}", us,
-             f"layers={len(g)};i_calls={res.stats.i_calls};"
-             f"s_calls={res.stats.s_calls};"
-             f"pruned={res.stats.pruned_threshold + res.stats.pruned_halo}")
+        rec = _bench_model(model, g, EST, lambda: EST, tb)
+        out["models"][model] = {"analytic": rec}
+        emit(f"search/{model}", rec["batched_us"],
+             f"layers={rec['layers']};i_rows={rec['i_rows']};"
+             f"s_rows={rec['s_rows']};speedup_vs_reference="
+             f"{rec['speedup']:.1f}x;match={rec['match']}")
 
-    # optimality check vs exhaustive on a 5-layer random graph
+    # data-driven CE: the reference walks the forest once per scalar call,
+    # the batched path twice per search — this is the headline speedup.
+    # Fresh GBDTEstimator per reference repeat keeps its caches cold.
+    gbdt = train_estimators(
+        TraceConfig(n_samples=_GBDT_SAMPLES, seed=0),
+        gbdt_kwargs=dict(n_estimators=_GBDT_TREES, max_depth=6))
+    for model, fn in EDGE_MODELS.items():
+        g = fn()
+        rec = _bench_model(
+            model, g, gbdt,
+            lambda: GBDTEstimator(gbdt.i_model, gbdt.s_model), tb)
+        out["models"][model]["gbdt"] = rec
+        emit(f"search-gbdt/{model}", rec["batched_us"],
+             f"speedup_vs_reference={rec['speedup']:.1f}x;"
+             f"match={rec['match']}")
+
+    # optimality check vs exhaustive on a 5-layer random graph — DP must
+    # find the oracle optimum AND beat it on wall clock
     rng = random.Random(0)
     layers = []
     h, c = 28, 32
@@ -32,11 +95,25 @@ def run() -> None:
     g = chain("opt5", layers)
     us_dp, dp = time_call(lambda: plan_search(g, EST, tb))
     us_ex, ex = time_call(lambda: exhaustive_search(g, EST, tb), repeats=1)
+    match = abs(dp.cost - ex[1]) < 1e-12
+    assert match, f"DP missed the exhaustive optimum: {dp.cost} vs {ex[1]}"
+    assert us_dp < us_ex, (f"DP ({us_dp:.0f}us) did not beat exhaustive "
+                           f"({us_ex:.0f}us)")
+    out["optimality_5layer"] = {
+        "dp_cost_ms": dp.cost * 1e3, "exhaustive_cost_ms": ex[1] * 1e3,
+        "match": match,
+        "speedup_vs_exhaustive": round(us_ex / max(us_dp, 1e-9), 1)}
     emit("search/optimality-5layer", us_dp,
          f"dp={dp.cost * 1e3:.4f}ms;exhaustive={ex[1] * 1e3:.4f}ms;"
-         f"match={abs(dp.cost - ex[1]) < 1e-12};"
+         f"match={match};"
          f"speedup_vs_exhaustive={us_ex / max(us_dp, 1e-9):.1f}x")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote {json_path}", file=sys.stderr)
+    return out
 
 
 if __name__ == "__main__":
-    run()
+    run(json_path=json_arg(sys.argv[1:]))

@@ -3,18 +3,23 @@ from .graph import (GRAPH_INPUT, Branch, ConvT, LayerSpec, ModelGraph, chain,
                     halo_growth)
 from .partition import ALL_SCHEMES, Mode, Scheme
 from .cost import Testbed, Topology
-from .estimator import AnalyticEstimator, GBDTEstimator
+from .estimator import (AnalyticEstimator, BatchedCostEstimator,
+                        CostEstimator, GBDTEstimator)
+from .cost_tables import (ChainTables, CostTableBuilder, PrefetchedEstimator,
+                          build_chain_tables)
 from .plan import (Plan, dag_plan_cost, fixed_plan, plan_cost, plan_feasible,
                    steps_segments)
-from .dpp import SearchResult, plan_search
+from .dpp import SearchResult, plan_search, plan_search_reference
 from .exhaustive import enumerate_dag_plans, exhaustive_search
 from . import baselines
 
 __all__ = [
     "GRAPH_INPUT", "Branch", "ConvT", "LayerSpec", "ModelGraph", "chain",
     "halo_growth", "ALL_SCHEMES", "Mode", "Scheme", "Testbed", "Topology",
-    "AnalyticEstimator", "GBDTEstimator", "Plan", "dag_plan_cost",
+    "AnalyticEstimator", "BatchedCostEstimator", "CostEstimator",
+    "GBDTEstimator", "ChainTables", "CostTableBuilder",
+    "PrefetchedEstimator", "build_chain_tables", "Plan", "dag_plan_cost",
     "fixed_plan", "plan_cost", "plan_feasible", "steps_segments",
-    "SearchResult", "plan_search", "enumerate_dag_plans",
-    "exhaustive_search", "baselines",
+    "SearchResult", "plan_search", "plan_search_reference",
+    "enumerate_dag_plans", "exhaustive_search", "baselines",
 ]

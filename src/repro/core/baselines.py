@@ -12,6 +12,7 @@ from __future__ import annotations
 from typing import Callable, Dict, Tuple
 
 from .cost import Testbed
+from .cost_tables import PrefetchedEstimator
 from .dpp import SearchResult, plan_search
 from .estimator import CostEstimator
 from .graph import ModelGraph
@@ -22,7 +23,11 @@ from .plan import Plan, fixed_plan, plan_cost
 def one_dim(graph: ModelGraph, est: CostEstimator, tb: Testbed,
             scheme: Scheme) -> Tuple[Plan, float]:
     plan = fixed_plan(graph, scheme)
-    return plan, plan_cost(graph, plan, est, tb)
+    # all-T single-scheme plan: prefetch its n i-costs and n-1 s-costs in
+    # one batched call instead of 2n-1 scalar ones
+    pf = PrefetchedEstimator.for_graph(graph, est, tb, (scheme,),
+                                       allow_fusion=False)
+    return plan, plan_cost(graph, plan, pf, tb)
 
 
 def layerwise(graph: ModelGraph, est: CostEstimator,

@@ -13,15 +13,29 @@ import dataclasses
 import enum
 from typing import Optional
 
+import numpy as np
+
 from .graph import ConvT, LayerSpec
 from .partition import (Mode, Scheme, boundary_bytes_same_scheme,
-                        relayout_bytes, shard_work)
+                        boundary_bytes_same_scheme_batch,
+                        conv_flops_per_elem_batch, relayout_bytes,
+                        relayout_bytes_batch, shard_work,
+                        straggler_flops_batch)
 
 
 class Topology(enum.IntEnum):
     RING = 0
     PS = 1     # parameter-server (star)
     MESH = 2   # full bisection, direct point-to-point
+
+
+#: multiplier on bytes-on-busiest-link per topology (single source for the
+#: scalar and batched paths)
+_TOPO_FACTOR = {Topology.RING: 1.0, Topology.PS: 2.0, Topology.MESH: 0.7}
+
+#: kernel-efficiency derate per layer category (low arithmetic intensity)
+_CONV_T_DERATE = {ConvT.DWCONV: 0.45, ConvT.POOL: 0.60,
+                  ConvT.ADD: 0.30, ConvT.CONCAT: 0.30}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,8 +60,7 @@ class Testbed:
 
     def topo_factor(self) -> float:
         """Multiplier on bytes-on-busiest-link."""
-        return {Topology.RING: 1.0, Topology.PS: 2.0, Topology.MESH: 0.7}[
-            self.topology]
+        return _TOPO_FACTOR[self.topology]
 
     def comm_time_s(self, bytes_busiest: float, n_messages: int = 2) -> float:
         if bytes_busiest <= 0.0:
@@ -62,13 +75,9 @@ def compute_time_s(layer: LayerSpec, scheme: Scheme, tb: Testbed,
     """i-Estimator ground truth: straggler compute time of one layer."""
     work = shard_work(layer, scheme, tb.nodes, extra_halo=extra_halo)
     eff = tb.efficiency(scheme)
-    # depthwise conv sustains lower utilization (low arithmetic intensity)
-    if layer.conv_t == ConvT.DWCONV:
-        eff *= 0.45
-    elif layer.conv_t == ConvT.POOL:
-        eff *= 0.60
-    elif layer.conv_t in (ConvT.ADD, ConvT.CONCAT):
-        eff *= 0.30
+    derate = _CONV_T_DERATE.get(layer.conv_t)
+    if derate is not None:
+        eff *= derate
     return work.straggler_flops / (tb.device_gflops * 1e9 * eff)
 
 
@@ -91,3 +100,100 @@ def sync_time_s(layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
     if dst.spatial:
         halo = boundary_bytes_same_scheme(layer, nxt, dst, tb.nodes)
     return tb.comm_time_s(b + halo, n_messages=2 * (tb.nodes - 1))
+
+
+# ---------------------------------------------------------------------------
+# Batched forms over stacked feature matrices.
+#
+# Row layout matches ``estimator.i_features`` / ``estimator.s_features``
+# (asserted against I_FEATURE_NAMES / S_FEATURE_NAMES there).  Per-sample
+# testbed variation travels in the BW / Topo / Nodes columns; the remaining
+# physics constants (device_gflops, link latency, kernel efficiencies) come
+# from the ``tb`` argument.  Float expressions mirror the scalar op order,
+# so for any row the batched time is bit-identical to the scalar one.
+# ---------------------------------------------------------------------------
+
+# shared leading columns of both feature layouts
+(_F_IN_H, _F_IN_W, _F_IN_C, _F_OUT_H, _F_OUT_W, _F_OUT_C, _F_K, _F_S, _F_P,
+ _F_CONV_T, _F_FAN_IN, _F_BW, _F_TOPO, _F_NODES) = range(14)
+# i-feature tail
+_F_SCHEME, _F_HALO = 14, 15
+# s-feature tail
+_F_SRC, _F_DST, _F_NEXT_K, _F_NEXT_FAN = 14, 15, 16, 17
+
+_TOPO_FACTORS = np.asarray([_TOPO_FACTOR[t] for t in Topology])
+
+
+def _comm_time_batch(tb: Testbed, bytes_busiest: np.ndarray,
+                     n_messages: np.ndarray, bw_gbps: np.ndarray,
+                     topo: np.ndarray) -> np.ndarray:
+    """Vector form of :meth:`Testbed.comm_time_s` with per-row BW/topology."""
+    bw = bw_gbps * 1e9 / 8.0
+    t = (bytes_busiest * _TOPO_FACTORS[topo] / bw
+         + n_messages * tb.link_latency_us * 1e-6)
+    return np.where(bytes_busiest <= 0.0, 0.0, t)
+
+
+def compute_time_batch_s(X: np.ndarray, tb: Testbed,
+                         flop_factor: Optional[np.ndarray] = None
+                         ) -> np.ndarray:
+    """Vector form of :func:`compute_time_s` over an ``(n, 16)`` i-feature
+    matrix.  ``flop_factor`` carries ``LayerSpec.extra_flop_factor`` (not
+    part of the learned feature expression; defaults to 1)."""
+    X = np.asarray(X, np.float64)
+    conv_t = X[:, _F_CONV_T].astype(np.int64)
+    scheme = X[:, _F_SCHEME].astype(np.int64)
+    oh = X[:, _F_OUT_H].astype(np.int64)
+    ow = X[:, _F_OUT_W].astype(np.int64)
+    oc = X[:, _F_OUT_C].astype(np.int64)
+    nodes = X[:, _F_NODES].astype(np.int64)
+    halo = X[:, _F_HALO].astype(np.int64)
+    factor = (np.ones(len(X), np.float64) if flop_factor is None
+              else np.asarray(flop_factor, np.float64))
+    per = conv_flops_per_elem_batch(conv_t, X[:, _F_IN_C], X[:, _F_K],
+                                    X[:, _F_FAN_IN])
+    work = straggler_flops_batch(per, oh, ow, oc, scheme, nodes, halo,
+                                 factor)
+    eff = np.asarray([tb.eff_inh, tb.eff_inw, tb.eff_outc,
+                      tb.eff_grid])[scheme]
+    for ct, derate in _CONV_T_DERATE.items():
+        eff = np.where(conv_t == ct, eff * derate, eff)
+    return work / (tb.device_gflops * 1e9 * eff)
+
+
+def sync_time_batch_s(X: np.ndarray, tb: Testbed) -> np.ndarray:
+    """Vector form of :func:`sync_time_s` over an ``(n, 18)`` s-feature
+    matrix (``Dst = -1`` encodes the final gather-to-root)."""
+    X = np.asarray(X, np.float64)
+    oh = X[:, _F_OUT_H].astype(np.int64)
+    ow = X[:, _F_OUT_W].astype(np.int64)
+    oc = X[:, _F_OUT_C].astype(np.int64)
+    nodes = X[:, _F_NODES].astype(np.int64)
+    src = X[:, _F_SRC].astype(np.int64)
+    dst = X[:, _F_DST].astype(np.int64)
+    next_k = X[:, _F_NEXT_K].astype(np.int64)
+    topo = X[:, _F_TOPO].astype(np.int64)
+    bw = X[:, _F_BW]
+
+    final = dst < 0
+    src_spatial = src != Scheme.OUTC
+    dst_spatial = (dst != Scheme.OUTC) & ~final
+    same_spatial = (src == dst) & src_spatial
+
+    total = (oh * ow * oc) * 4.0
+    gather_b = total * (nodes - 1) / nodes
+
+    halo_src = boundary_bytes_same_scheme_batch(src, oh, ow, oc, nodes,
+                                                next_k)
+    halo_dst = boundary_bytes_same_scheme_batch(dst, oh, ow, oc, nodes,
+                                                next_k)
+    relay_b = relayout_bytes_batch(oh, ow, oc, src, dst, nodes) \
+        + np.where(dst_spatial, halo_dst, 0.0)
+
+    bytes_b = np.where(final, gather_b,
+                       np.where(same_spatial, halo_src, relay_b))
+    msgs = np.where(final, nodes - 1,
+                    np.where(same_spatial,
+                             np.where(halo_src != 0.0, 2, 0),
+                             2 * (nodes - 1)))
+    return _comm_time_batch(tb, bytes_b, msgs, bw, topo)

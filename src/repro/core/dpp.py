@@ -25,14 +25,29 @@ which is what keeps the Theorem-1 oracle property on DAGs).  The junction
 skeleton must be a "ladder" — parallel branch bundles between consecutive
 fork/merge points, which covers residual blocks and Inception-style modules;
 arbitrary multi-source or nested-fork DAGs raise ``ValueError``.
+
+Two drivers share that search structure:
+
+* :func:`plan_search` — the production path.  Every i-/s-cost the DP can
+  touch is precomputed through ``core.cost_tables`` in one batched
+  ``i_cost_batch`` + one ``s_cost_batch`` estimator call, the chain DP
+  becomes numpy reductions over the scheme axis, and ``SearchStats`` is
+  derived from the table masks.
+* :func:`plan_search_reference` — the original scalar-call implementation,
+  kept verbatim as the parity oracle.  Both estimators guarantee their
+  batched entry points bit-match the scalar ones, and the batched DP
+  replicates the scalar tie-breaking (first minimum wins in ``b`` then
+  ``q`` order), so both drivers return bit-identical plans and costs.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .cost import Testbed
+from .cost_tables import CostTableBuilder, plan_chain_tables
 from .estimator import CostEstimator
 from .graph import ModelGraph, halo_growth
 from .partition import ALL_SCHEMES, Mode, Scheme, min_shard_extent
@@ -61,132 +76,123 @@ def plan_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
                 schemes: Sequence[Scheme] = ALL_SCHEMES,
                 max_segment: int = 32,
                 allow_fusion: bool = True) -> SearchResult:
-    """Run DPP.  ``allow_fusion=False`` restricts to all-T plans (the
-    layerwise baseline); ``schemes`` restricted to one scheme with fusion on
-    gives the fused-layer baseline.  Dispatches to the per-branch DAG
-    composition when the graph is not a chain."""
+    """Run DPP from precomputed batched cost tables.  ``allow_fusion=False``
+    restricts to all-T plans (the layerwise baseline); ``schemes``
+    restricted to one scheme with fusion on gives the fused-layer baseline.
+    Dispatches to the per-branch DAG composition when the graph is not a
+    chain.  Returns the same plan and cost as
+    :func:`plan_search_reference`, bit for bit.
+
+    The batched tables assume the estimator is determined by the feature
+    expression (the ``i_cost_batch`` contract).  Estimators that only
+    implement the scalar protocol — e.g. oracles keyed on layer *names* —
+    run the scalar reference unchanged."""
+    if not hasattr(est, "i_cost_batch"):
+        return plan_search_reference(graph, est, tb, schemes, max_segment,
+                                     allow_fusion)
     if not graph.is_chain:
-        return _dag_plan_search(graph, est, tb, tuple(schemes), max_segment,
-                                allow_fusion)
+        return _dag_plan_search_batched(graph, est, tb, tuple(schemes),
+                                        max_segment, allow_fusion)
+    return _chain_plan_search_batched(graph, est, tb, tuple(schemes),
+                                      max_segment, allow_fusion)
+
+
+# ---------------------------------------------------------------------------
+# Batched chain DP: numpy reductions over the (scheme x segment-length) axes.
+# ---------------------------------------------------------------------------
+
+def _chain_plan_search_batched(graph: ModelGraph, est: CostEstimator,
+                               tb: Testbed, schemes: Tuple[Scheme, ...],
+                               max_segment: int,
+                               allow_fusion: bool) -> SearchResult:
     layers = graph.layers
     n = len(layers)
     k = len(schemes)
-    stats = SearchStats()
 
-    S: List[List[float]] = [[_INF] * k for _ in range(n + 1)]
-    # choice[i][pi] = (segment_end_b, next_scheme_index or -1)
-    choice: List[List[Tuple[int, int]]] = [[(-1, -1)] * k for _ in range(n + 1)]
+    builder = CostTableBuilder(est, tb)
+    fin = plan_chain_tables(layers, builder, schemes, max_segment,
+                            allow_fusion, tb.nodes, with_final=True)
+    tbl = fin(*builder.evaluate())
+    seg = tbl.seg                        # (n, k, cap), +inf = inadmissible
+    cap = seg.shape[2]
 
+    S = np.full((n + 1, k), _INF)
+    choice_b = np.full((n, k), -1, np.int64)
+    choice_q = np.full((n, k), -1, np.int64)
+    ks = np.arange(k)
     for i in range(n - 1, -1, -1):
-        for pi, p in enumerate(schemes):
-            best, best_choice = _INF, (-1, -1)
-            stats.states += 1
-            seg_hi = min(i + max_segment, n) if allow_fusion else i + 1
-            for b in range(i, seg_hi):
-                if b > i and not p.spatial:
-                    break  # OutC cannot fuse (NT undefined)
-                halos = halo_growth(layers[i:b + 1], b - i)
-                if b > i and 2 * halos[0] >= min_shard_extent(
-                        layers[i], p, tb.nodes):
-                    stats.pruned_halo += 1
-                    break  # halo degenerated into replication
-                segcost = 0.0
-                for off, m in enumerate(range(i, b + 1)):
-                    segcost += est.i_cost(layers[m], p, tb,
-                                          extra_halo=halos[off] if b > i else 0)
-                    stats.i_calls += 1
-                if segcost >= best:
-                    stats.pruned_threshold += 1
-                    break  # dynamic threshold: monotone in b
-                if b == n - 1:
-                    stats.s_calls += 1
-                    c = segcost + est.s_cost(layers[b], None, p, None, tb)
-                    if c < best:
-                        best, best_choice = c, (b, -1)
-                else:
-                    for qi, q in enumerate(schemes):
-                        if S[b + 1][qi] == _INF:
-                            continue
-                        stats.s_calls += 1
-                        c = (segcost
-                             + est.s_cost(layers[b], layers[b + 1], p, q, tb)
-                             + S[b + 1][qi])
-                        if c < best:
-                            best, best_choice = c, (b, qi)
-            S[i][pi] = best
-            choice[i][pi] = best_choice
+        m = min(cap, n - i)
+        # cand[p, L, q] = (seg + boundary s-cost) + suffix — the same float
+        # association as the scalar reference, so costs stay bit-identical
+        cand = np.full((k, m, k), _INF)
+        Lf = n - 1 - i                      # L index of a graph-final segment
+        if Lf < m:
+            cand[:, Lf, 0] = seg[i, :, Lf] + tbl.s_final
+        mn = min(m, Lf)                     # segments with a next layer
+        if mn > 0:
+            sb = tbl.sbound[i:i + mn].transpose(1, 0, 2)       # (p, L, q)
+            cand[:, :mn, :] = (seg[i, :, :mn, None] + sb) \
+                + S[i + 1:i + 1 + mn][None, :, :]
+        flat = cand.reshape(k, m * k)
+        fi = np.argmin(flat, axis=1)        # first min: b-major, q-minor —
+        S[i] = flat[ks, fi]                 # the scalar scan order
+        Lb = fi // k
+        choice_b[i] = i + Lb
+        choice_q[i] = np.where(Lb == Lf, -1, fi % k)
 
-    pi = min(range(k), key=lambda j: S[0][j])
-    total = S[0][pi]
+    pi = int(np.argmin(S[0]))
+    total = float(S[0][pi])
+
     steps: List[Tuple[Scheme, Mode]] = []
     i = 0
     while i < n:
-        b, qi = choice[i][pi]
+        b, qi = int(choice_b[i][pi]), int(choice_q[i][pi])
         p = schemes[pi]
-        for m in range(i, b + 1):
-            steps.append((p, Mode.NT if m < b else Mode.T))
+        for m2 in range(i, b + 1):
+            steps.append((p, Mode.NT if m2 < b else Mode.T))
         i = b + 1
         if qi >= 0:
             pi = qi
+
+    stats = SearchStats(
+        i_calls=builder.i_entries, s_calls=builder.s_entries,
+        states=n * k, pruned_halo=tbl.halo_cuts,
+        pruned_threshold=_threshold_prunes(seg, S[:n]))
     return SearchResult(plan=Plan(tuple(steps)), cost=total, stats=stats)
 
 
+def _threshold_prunes(seg: np.ndarray, S: np.ndarray) -> int:
+    """Dynamic-threshold prune counter, derived from the table masks: a
+    state (i, p) counts as pruned when some admissible segment's i-cost
+    alone already reaches the state's optimal remaining time — exactly the
+    candidates the scalar backtrack refuses to extend."""
+    with np.errstate(invalid="ignore"):
+        hit = (seg != _INF) & (seg >= S[:, :, None]) & \
+            np.isfinite(S[:, :, None])
+    return int(hit.any(axis=2).sum())
+
+
 # ---------------------------------------------------------------------------
-# DAG composition: per-branch chain tables + ladder DP over junctions.
+# Shared per-branch chain DP with pinned boundary layouts (used by both the
+# batched and reference DAG drivers — only the cost lookups differ).
 # ---------------------------------------------------------------------------
 
-def _chain_tables(ls, icost, scost, schemes, max_segment, allow_fusion,
-                  head_solo, nodes, stats):
+def _pinned_chain_dp(n: int, schemes: Tuple[Scheme, ...],
+                     seg_costs: Callable[[int, int], List[Tuple[int, float]]],
+                     bound_cost: Callable[[int, int, int], float],
+                     stats: SearchStats) -> Dict[Tuple[int, int],
+                                                 Tuple[float, tuple]]:
     """Reverse DP over one branch with pinned boundary layouts.
 
     Returns ``{(head_idx, tail_idx): (cost, steps)}`` — the minimal
     *internal* cost of the branch (i-costs with halos + s-costs at internal
     T boundaries; no entry delivery, no exit delivery/gather) with the first
     segment using ``schemes[head_idx]`` and the last ``schemes[tail_idx]``.
-    ``head_solo`` pins the first layer to a singleton T segment (merge
-    layers: their inputs arrive from several producers, so they can never be
-    NT-fused upstream and we also keep them out of downstream fusion).
+    ``seg_costs(i, pi)`` yields the admissible ``(b, segcost)`` options in
+    ascending ``b`` order (already reflecting any head pinning).
     """
-    n = len(ls)
     k = len(schemes)
     tables: Dict[Tuple[int, int], Tuple[float, tuple]] = {}
-
-    # Segment and boundary costs are identical across the k tail pins, so
-    # compute each once (lazily) and share them between the per-tail DPs.
-    seg_cache: Dict[Tuple[int, int], List[Tuple[int, float]]] = {}
-    bound_cache: Dict[Tuple[int, int, int], float] = {}
-
-    def seg_costs(i: int, pi: int) -> List[Tuple[int, float]]:
-        hit = seg_cache.get((i, pi))
-        if hit is not None:
-            return hit
-        p = schemes[pi]
-        out: List[Tuple[int, float]] = []
-        seg_hi = min(i + max_segment, n) if allow_fusion else i + 1
-        if head_solo and i == 0:
-            seg_hi = i + 1
-        for b in range(i, seg_hi):
-            if b > i and not p.spatial:
-                break
-            halos = halo_growth(ls[i:b + 1], b - i)
-            if b > i and 2 * halos[0] >= min_shard_extent(ls[i], p, nodes):
-                stats.pruned_halo += 1
-                break
-            segcost = 0.0
-            for off, m in enumerate(range(i, b + 1)):
-                segcost += icost(ls[m], p, halos[off] if b > i else 0)
-            out.append((b, segcost))
-        seg_cache[(i, pi)] = out
-        return out
-
-    def bound_cost(b: int, pi: int, qi: int) -> float:
-        key = (b, pi, qi)
-        hit = bound_cache.get(key)
-        if hit is None:
-            hit = scost(ls[b], ls[b + 1], schemes[pi], schemes[qi])
-            bound_cache[key] = hit
-        return hit
-
     for ti in range(k):
         S = [[_INF] * k for _ in range(n)]
         choice = [[(-1, -1)] * k for _ in range(n)]
@@ -227,6 +233,55 @@ def _chain_tables(ls, icost, scost, schemes, max_segment, allow_fusion,
             tables[(pi, ti)] = (S[0][pi], tuple(steps))
     return tables
 
+
+def _scalar_chain_tables(ls, icost, scost, schemes, max_segment,
+                         allow_fusion, head_solo, nodes, stats):
+    """Reference (scalar-call) segment/boundary providers + pinned DP."""
+    n = len(ls)
+    k = len(schemes)
+
+    # Segment and boundary costs are identical across the k tail pins, so
+    # compute each once (lazily) and share them between the per-tail DPs.
+    seg_cache: Dict[Tuple[int, int], List[Tuple[int, float]]] = {}
+    bound_cache: Dict[Tuple[int, int, int], float] = {}
+
+    def seg_costs(i: int, pi: int) -> List[Tuple[int, float]]:
+        hit = seg_cache.get((i, pi))
+        if hit is not None:
+            return hit
+        p = schemes[pi]
+        out: List[Tuple[int, float]] = []
+        seg_hi = min(i + max_segment, n) if allow_fusion else i + 1
+        if head_solo and i == 0:
+            seg_hi = i + 1
+        for b in range(i, seg_hi):
+            if b > i and not p.spatial:
+                break
+            halos = halo_growth(ls[i:b + 1], b - i)
+            if b > i and 2 * halos[0] >= min_shard_extent(ls[i], p, nodes):
+                stats.pruned_halo += 1
+                break
+            segcost = 0.0
+            for off, m in enumerate(range(i, b + 1)):
+                segcost += icost(ls[m], p, halos[off] if b > i else 0)
+            out.append((b, segcost))
+        seg_cache[(i, pi)] = out
+        return out
+
+    def bound_cost(b: int, pi: int, qi: int) -> float:
+        key = (b, pi, qi)
+        hit = bound_cache.get(key)
+        if hit is None:
+            hit = scost(ls[b], ls[b + 1], schemes[pi], schemes[qi])
+            bound_cache[key] = hit
+        return hit
+
+    return _pinned_chain_dp(n, schemes, seg_costs, bound_cost, stats)
+
+
+# ---------------------------------------------------------------------------
+# DAG composition: per-branch chain tables + ladder DP over junctions.
+# ---------------------------------------------------------------------------
 
 def _ladder(graph: ModelGraph):
     """Condense the DAG's branches into a spine with parallel bundles.
@@ -296,32 +351,22 @@ def _ladder(graph: ModelGraph):
     return branches, spine, bundles
 
 
-def _dag_plan_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
-                     schemes: Tuple[Scheme, ...], max_segment: int,
-                     allow_fusion: bool) -> SearchResult:
-    stats = SearchStats()
-
-    def icost(l, p, halo=0):
-        stats.i_calls += 1
-        return est.i_cost(l, p, tb, extra_halo=halo)
-
-    def scost(l, nxt, s, d):
-        stats.s_calls += 1
-        return est.s_cost(l, nxt, s, d, tb)
-
+def _dag_compose(graph: ModelGraph, schemes: Tuple[Scheme, ...],
+                 btable: Callable[[int, bool], Dict],
+                 jscost: Callable[[int, Optional[int], int, Optional[int]],
+                                  float],
+                 stats: SearchStats) -> SearchResult:
+    """Ladder DP over junctions, shared by the batched and reference
+    drivers.  ``btable(branch, head_solo)`` returns the pinned chain tables
+    of one branch; ``jscost(prod_id, cons_id, pi, qi)`` the junction
+    delivery s-cost (``cons_id=None``/``qi=None`` is the final gather)."""
     branches, spine, bundles = _ladder(graph)
     layers = graph.layers
     k = len(schemes)
     K = len(spine)
 
-    def btable(t, head_solo):
-        ls = [layers[i] for i in branches[t].ids]
-        return _chain_tables(ls, icost, scost, schemes, max_segment,
-                             allow_fusion, head_solo, tb.nodes, stats)
-
-    spine_tab = [btable(s, head_solo=(idx > 0))
-                 for idx, s in enumerate(spine)]
-    interior_tab = {b: btable(b, head_solo=False)
+    spine_tab = [btable(s, idx > 0) for idx, s in enumerate(spine)]
+    interior_tab = {b: btable(b, False)
                     for ints, _ in bundles for b in ints}
 
     # min over head schemes of (fork delivery + branch internal cost), per
@@ -333,15 +378,14 @@ def _dag_plan_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
         hit = ib_memo.get(key)
         if hit is not None:
             return hit
-        fork_layer = layers[graph.producer_ids[branches[b].head][0]]
-        head_layer = layers[branches[b].head]
+        fork_id = graph.producer_ids[branches[b].head][0]
+        head_id = branches[b].head
         best: Tuple[float, int] = (_INF, -1)
         for ph_i in range(k):
             e = interior_tab[b].get((ph_i, pt_i))
             if e is None:
                 continue
-            c = scost(fork_layer, head_layer, schemes[qf_i],
-                      schemes[ph_i]) + e[0]
+            c = jscost(fork_id, head_id, qf_i, ph_i) + e[0]
             if c < best[0]:
                 best = (c, ph_i)
         ib_memo[key] = best
@@ -361,23 +405,22 @@ def _dag_plan_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
         if hit is not None:
             return hit
         ints, n_direct = bundles[t]
-        fork_l = layers[branches[spine[t]].tail]
-        merge_l = layers[branches[spine[t + 1]].head]
-        d0 = scost(fork_l, merge_l, schemes[pt_i],
-                   schemes[qm_i]) if n_direct else None
+        fork_id = branches[spine[t]].tail
+        merge_id = branches[spine[t + 1]].head
+        d0 = jscost(fork_id, merge_id, pt_i, qm_i) if n_direct else None
         if not ints:
             res = (d0 if d0 is not None else 0.0, [])
             bundle_memo[key] = res
             return res
         opts: List[List[Tuple[float, float, int, int]]] = []
         for b in ints:
-            tail_l = layers[branches[b].tail]
+            tail_id = branches[b].tail
             o = []
             for pti in range(k):
                 c, ph_i = ib_entry(b, pt_i, pti)
                 if c == _INF:
                     continue
-                d = scost(tail_l, merge_l, schemes[pti], schemes[qm_i])
+                d = jscost(tail_id, merge_id, pti, qm_i)
                 o.append((c, d, ph_i, pti))
             if not o:
                 bundle_memo[key] = (_INF, None)
@@ -417,14 +460,14 @@ def _dag_plan_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
     # ---- spine DP (reverse) -----------------------------------------------
     # V[t][ph] = (cost from spine t's head onward, tail scheme, next head)
     V: List[Dict[int, Tuple[float, int, int]]] = [dict() for _ in range(K)]
-    tail_l = layers[branches[spine[-1]].tail]
+    tail_id = branches[spine[-1]].tail
     for ph_i in range(k):
         best = (_INF, -1, -1)
         for pt_i in range(k):
             e = spine_tab[K - 1].get((ph_i, pt_i))
             if e is None:
                 continue
-            c = e[0] + scost(tail_l, None, schemes[pt_i], None)
+            c = e[0] + jscost(tail_id, None, pt_i, None)
             if c < best[0]:
                 best = (c, pt_i, -1)
         if best[0] < _INF:
@@ -463,3 +506,183 @@ def _dag_plan_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
                     steps[idx] = st
             ph = ph_next
     return SearchResult(plan=Plan(tuple(steps)), cost=total, stats=stats)
+
+
+def _dag_plan_search_batched(graph: ModelGraph, est: CostEstimator,
+                             tb: Testbed, schemes: Tuple[Scheme, ...],
+                             max_segment: int,
+                             allow_fusion: bool) -> SearchResult:
+    """Batched DAG driver: register every branch segment/boundary and every
+    junction delivery with one table builder, evaluate in a single pair of
+    batched estimator calls, then run the shared ladder composition from
+    the tables."""
+    stats = SearchStats()
+    layers = graph.layers
+    branches = graph.linearize()
+
+    builder = CostTableBuilder(est, tb)
+    # geometrically identical branches (resnet101 repeats one bottleneck
+    # body 23x) share one table registration and one pinned DP
+    bkeys = [tuple(builder.layer_key(layers[i]) for i in br.ids)
+             for br in branches]
+    uniq: Dict[tuple, int] = {}
+    finalizers = []
+    for t, key in enumerate(bkeys):
+        if key not in uniq:
+            uniq[key] = len(finalizers)
+            ls = [layers[i] for i in branches[t].ids]
+            finalizers.append(plan_chain_tables(
+                ls, builder, schemes, max_segment, allow_fusion, tb.nodes,
+                with_final=False))
+
+    # junction deliveries: every cross-branch (producer tail, consumer)
+    # edge plus the final gather, all (src, dst) scheme pairs
+    jidx: Dict[Tuple[int, Optional[int], int, Optional[int]], int] = {}
+    for br in branches:
+        tail = br.ids[-1]
+        consumers = graph.consumer_ids[tail]
+        if not consumers:
+            for pi, p in enumerate(schemes):
+                jidx[(tail, None, pi, None)] = builder.s_index(
+                    layers[tail], None, p, None)
+        for c in consumers:
+            for pi, p in enumerate(schemes):
+                for qi, q in enumerate(schemes):
+                    jidx[(tail, c, pi, qi)] = builder.s_index(
+                        layers[tail], layers[c], p, q)
+
+    ivals, svals = builder.evaluate()
+    utables = [fin(ivals, svals) for fin in finalizers]
+    stats.i_calls = builder.i_entries
+    stats.s_calls = builder.s_entries
+    stats.pruned_halo = sum(utables[u].halo_cuts for u in uniq.values())
+
+    dp_memo: Dict[Tuple[int, bool], Dict] = {}
+
+    def btable(t: int, head_solo: bool):
+        u = uniq[bkeys[t]]
+        hit = dp_memo.get((u, head_solo))
+        if hit is not None:
+            return hit
+        tbl = utables[u]
+
+        def seg_costs(i: int, pi: int):
+            return tbl.seg_options(i, pi, head_solo)
+
+        out = _pinned_chain_dp(len(branches[t]), schemes, seg_costs,
+                               tbl.bound, stats)
+        dp_memo[(u, head_solo)] = out
+        return out
+
+    def jscost(prod: int, cons: Optional[int], pi: int,
+               qi: Optional[int]) -> float:
+        return float(svals[jidx[(prod, cons, pi, qi)]])
+
+    return _dag_compose(graph, schemes, btable, jscost, stats)
+
+
+# ---------------------------------------------------------------------------
+# Reference (scalar-call) driver — kept as the parity/benchmark oracle.
+# ---------------------------------------------------------------------------
+
+def plan_search_reference(graph: ModelGraph, est: CostEstimator, tb: Testbed,
+                          schemes: Sequence[Scheme] = ALL_SCHEMES,
+                          max_segment: int = 32,
+                          allow_fusion: bool = True) -> SearchResult:
+    """Scalar-call DPP: one ``est.i_cost``/``est.s_cost`` invocation per
+    sample.  Semantically identical to :func:`plan_search`; retained as the
+    exactness oracle and the benchmark baseline."""
+    if not graph.is_chain:
+        return _dag_plan_search_reference(graph, est, tb, tuple(schemes),
+                                          max_segment, allow_fusion)
+    layers = graph.layers
+    n = len(layers)
+    k = len(schemes)
+    stats = SearchStats()
+
+    S: List[List[float]] = [[_INF] * k for _ in range(n + 1)]
+    # choice[i][pi] = (segment_end_b, next_scheme_index or -1)
+    choice: List[List[Tuple[int, int]]] = [[(-1, -1)] * k for _ in range(n + 1)]
+
+    for i in range(n - 1, -1, -1):
+        for pi, p in enumerate(schemes):
+            best, best_choice = _INF, (-1, -1)
+            stats.states += 1
+            seg_hi = min(i + max_segment, n) if allow_fusion else i + 1
+            for b in range(i, seg_hi):
+                if b > i and not p.spatial:
+                    break  # OutC cannot fuse (NT undefined)
+                halos = halo_growth(layers[i:b + 1], b - i)
+                if b > i and 2 * halos[0] >= min_shard_extent(
+                        layers[i], p, tb.nodes):
+                    stats.pruned_halo += 1
+                    break  # halo degenerated into replication
+                segcost = 0.0
+                for off, m in enumerate(range(i, b + 1)):
+                    segcost += est.i_cost(layers[m], p, tb,
+                                          extra_halo=halos[off] if b > i else 0)
+                    stats.i_calls += 1
+                if segcost >= best:
+                    stats.pruned_threshold += 1
+                    break  # dynamic threshold: monotone in b
+                if b == n - 1:
+                    stats.s_calls += 1
+                    c = segcost + est.s_cost(layers[b], None, p, None, tb)
+                    if c < best:
+                        best, best_choice = c, (b, -1)
+                else:
+                    for qi, q in enumerate(schemes):
+                        if S[b + 1][qi] == _INF:
+                            continue
+                        stats.s_calls += 1
+                        c = (segcost
+                             + est.s_cost(layers[b], layers[b + 1], p, q, tb)
+                             + S[b + 1][qi])
+                        if c < best:
+                            best, best_choice = c, (b, qi)
+            S[i][pi] = best
+            choice[i][pi] = best_choice
+
+    pi = min(range(k), key=lambda j: S[0][j])
+    total = S[0][pi]
+    steps: List[Tuple[Scheme, Mode]] = []
+    i = 0
+    while i < n:
+        b, qi = choice[i][pi]
+        p = schemes[pi]
+        for m in range(i, b + 1):
+            steps.append((p, Mode.NT if m < b else Mode.T))
+        i = b + 1
+        if qi >= 0:
+            pi = qi
+    return SearchResult(plan=Plan(tuple(steps)), cost=total, stats=stats)
+
+
+def _dag_plan_search_reference(graph: ModelGraph, est: CostEstimator,
+                               tb: Testbed, schemes: Tuple[Scheme, ...],
+                               max_segment: int,
+                               allow_fusion: bool) -> SearchResult:
+    stats = SearchStats()
+    layers = graph.layers
+
+    def icost(l, p, halo=0):
+        stats.i_calls += 1
+        return est.i_cost(l, p, tb, extra_halo=halo)
+
+    def scost(l, nxt, s, d):
+        stats.s_calls += 1
+        return est.s_cost(l, nxt, s, d, tb)
+
+    branches = graph.linearize()
+
+    def btable(t: int, head_solo: bool):
+        ls = [layers[i] for i in branches[t].ids]
+        return _scalar_chain_tables(ls, icost, scost, schemes, max_segment,
+                                    allow_fusion, head_solo, tb.nodes, stats)
+
+    def jscost(prod: int, cons: Optional[int], pi: int,
+               qi: Optional[int]) -> float:
+        return scost(layers[prod], None if cons is None else layers[cons],
+                     schemes[pi], None if qi is None else schemes[qi])
+
+    return _dag_compose(graph, schemes, btable, jscost, stats)

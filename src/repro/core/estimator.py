@@ -17,22 +17,50 @@ next_K, next_fan_in`` for s-.
 """
 from __future__ import annotations
 
-import math
 from typing import List, Optional, Protocol, Sequence
 
 import numpy as np
 
-from .cost import Testbed, compute_time_s, sync_time_s
+from .cost import (Testbed, compute_time_batch_s, compute_time_s,
+                   sync_time_batch_s, sync_time_s)
 from .graph import LayerSpec
 from .partition import Scheme
 
 
 class CostEstimator(Protocol):
+    """Scalar estimator protocol — the minimum every estimator provides.
+
+    Estimators may additionally implement :class:`BatchedCostEstimator`;
+    consumers feature-test with ``hasattr(est, "i_cost_batch")`` and fall
+    back to scalar-call paths otherwise (scalar-only estimators may depend
+    on information outside the feature expression, e.g. layer names)."""
+
     def i_cost(self, layer: LayerSpec, scheme: Scheme, tb: Testbed,
                extra_halo: int = 0) -> float: ...
 
     def s_cost(self, layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
                dst: Optional[Scheme], tb: Testbed) -> float: ...
+
+
+class BatchedCostEstimator(CostEstimator, Protocol):
+    """Batched extension: costs are determined by the feature expression
+    alone, and whole query matrices evaluate in one call, bit-identical to
+    the scalar protocol row for row."""
+
+    def i_cost_batch(self, X: np.ndarray, tb: Testbed,
+                     flop_factor: Optional[np.ndarray] = None
+                     ) -> np.ndarray:
+        """Vector i-Estimator over a stacked ``(n, 16)`` matrix of
+        :func:`i_features` rows.  Row ``j`` must equal
+        ``i_cost(layer_j, scheme_j, tb_j, halo_j)`` exactly.
+        ``flop_factor`` carries ``extra_flop_factor`` per row for estimators
+        that read the analytic physics (it is not a learned feature)."""
+        ...
+
+    def s_cost_batch(self, X: np.ndarray, tb: Testbed) -> np.ndarray:
+        """Vector s-Estimator over stacked ``(n, 18)`` :func:`s_features`
+        rows (``Dst = -1`` marks the final gather)."""
+        ...
 
 
 class AnalyticEstimator:
@@ -45,6 +73,14 @@ class AnalyticEstimator:
     def s_cost(self, layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
                dst: Optional[Scheme], tb: Testbed) -> float:
         return sync_time_s(layer, nxt, src, dst, tb)
+
+    def i_cost_batch(self, X: np.ndarray, tb: Testbed,
+                     flop_factor: Optional[np.ndarray] = None
+                     ) -> np.ndarray:
+        return compute_time_batch_s(X, tb, flop_factor)
+
+    def s_cost_batch(self, X: np.ndarray, tb: Testbed) -> np.ndarray:
+        return sync_time_batch_s(X, tb)
 
 
 # ---------------------------------------------------------------------------
@@ -89,7 +125,7 @@ class GBDTEstimator:
         if hit is None:
             x = np.asarray([i_features(layer, scheme, tb, extra_halo)],
                            dtype=np.float64)
-            hit = float(math.exp(self.i_model.predict(x)[0]))
+            hit = float(np.exp(self.i_model.predict(x)[0]))
             self._i_cache[key] = hit
         return hit
 
@@ -101,6 +137,17 @@ class GBDTEstimator:
         if hit is None:
             x = np.asarray([s_features(layer, nxt, src, dst, tb)],
                            dtype=np.float64)
-            hit = float(math.exp(self.s_model.predict(x)[0]))
+            hit = float(np.exp(self.s_model.predict(x)[0]))
             self._s_cache[key] = hit
         return hit
+
+    def i_cost_batch(self, X: np.ndarray, tb: Testbed,
+                     flop_factor: Optional[np.ndarray] = None
+                     ) -> np.ndarray:
+        """One forest pass for the whole matrix (``flop_factor`` is not part
+        of the learned feature expression and is ignored, exactly as the
+        scalar path ignores it)."""
+        return np.exp(self.i_model.predict(np.asarray(X, np.float64)))
+
+    def s_cost_batch(self, X: np.ndarray, tb: Testbed) -> np.ndarray:
+        return np.exp(self.s_model.predict(np.asarray(X, np.float64)))

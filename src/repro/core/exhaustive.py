@@ -12,6 +12,7 @@ import itertools
 from typing import Iterator, List, Optional, Sequence, Tuple
 
 from .cost import Testbed
+from .cost_tables import PrefetchedEstimator
 from .estimator import CostEstimator
 from .graph import ModelGraph
 from .partition import ALL_SCHEMES, Mode, Scheme
@@ -71,6 +72,10 @@ def enumerate_dag_plans(graph: ModelGraph,
 def exhaustive_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
                       schemes: Sequence[Scheme] = ALL_SCHEMES,
                       allow_fusion: bool = True) -> Tuple[Plan, float]:
+    # one batched prefetch answers every estimator query the enumeration
+    # can make (the plan space revisits the same segments endlessly, so
+    # scoring degenerates to dict lookups)
+    pf = PrefetchedEstimator.for_graph(graph, est, tb, schemes, allow_fusion)
     best: Optional[Plan] = None
     best_cost = float("inf")
     gen = (enumerate_plans(len(graph), schemes, allow_fusion)
@@ -79,7 +84,7 @@ def exhaustive_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
     for plan in gen:
         if not plan_feasible(graph, plan, tb.nodes):
             continue
-        c = plan_cost(graph, plan, est, tb)
+        c = plan_cost(graph, plan, pf, tb)
         if c < best_cost:
             best, best_cost = plan, c
     assert best is not None

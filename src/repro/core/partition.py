@@ -4,6 +4,11 @@ Implements the four schemes of Fig. 1 â€” One-dim InH / InW / OutC and 2D-grid â
 plus the T/NT boundary semantics of Â§2.3.  Everything here is exact integer
 geometry (no estimation); the cost model in ``cost.py`` turns these byte/FLOP
 counts into times for a given testbed.
+
+The scalar helpers each have a ``*_batch`` ufunc form operating on stacked
+feature columns (one row per query).  The batch forms replicate the scalar
+float operation *order*, so results are bit-identical â€” the planner's
+batched cost tables must agree exactly with the scalar reference path.
 """
 from __future__ import annotations
 
@@ -11,6 +16,8 @@ import dataclasses
 import enum
 import math
 from typing import List, Sequence, Tuple
+
+import numpy as np
 
 from .graph import ConvT, LayerSpec
 
@@ -176,6 +183,123 @@ def boundary_bytes_same_scheme(layer: LayerSpec, nxt: LayerSpec,
         # up/down + left/right + corners
         return 2.0 * halo * (cols + rows + halo) * oc * DTYPE_BYTES
     raise ValueError(scheme)
+
+
+# ---------------------------------------------------------------------------
+# Batched (ufunc) forms.  One row per query; integer columns are int64
+# arrays, float columns float64.  Float expressions copy the scalar
+# operation order verbatim so results are bit-identical to the scalar path.
+# ---------------------------------------------------------------------------
+
+def ceil_div_batch(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Elementwise ``ceil(a / b)`` on integer arrays."""
+    return -(-a // b)
+
+
+def grid_dims_batch(nodes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Vector form of :func:`grid_dims`."""
+    gh = np.ceil(np.sqrt(nodes)).astype(np.int64)
+    gw = np.ceil(nodes / gh).astype(np.int64)
+    return gh, gw
+
+
+def conv_flops_per_elem_batch(conv_t: np.ndarray, in_c: np.ndarray,
+                              k: np.ndarray,
+                              fan_in: np.ndarray) -> np.ndarray:
+    """Vector form of the per-output-element FLOP factor of
+    :func:`_conv_row_flops` (everything except the output region size)."""
+    return np.select(
+        [(conv_t == ConvT.CONV) | (conv_t == ConvT.POINTWISE),
+         conv_t == ConvT.DWCONV,
+         conv_t == ConvT.POOL,
+         conv_t == ConvT.FC,
+         conv_t == ConvT.ADD],
+        [2.0 * in_c * k * k,
+         2.0 * k * k,
+         1.0 * k * k,
+         2.0 * in_c,
+         np.maximum(1, fan_in - 1) * 1.0],
+        default=1.0)  # CONCAT: copy cost
+
+
+def straggler_flops_batch(per_elem: np.ndarray, oh: np.ndarray,
+                          ow: np.ndarray, oc: np.ndarray,
+                          scheme: np.ndarray, nodes: np.ndarray,
+                          halo: np.ndarray,
+                          flop_factor: np.ndarray) -> np.ndarray:
+    """Vector form of ``shard_work(...).straggler_flops``.
+
+    The 1-D schemes reduce to the ceil-shard in closed form (workload is
+    monotone in shard extent, so the straggler is the first shard of the
+    balanced split).  GRID2D replays the round-robin cell assignment per
+    distinct node count, accumulating cells in the scalar order.
+    """
+    if np.any((halo > 0) & (scheme == Scheme.OUTC)):
+        raise ValueError("NT halo is undefined for OutC partition")
+    out = np.empty(per_elem.shape, np.float64)
+
+    m = scheme == Scheme.INH
+    if m.any():
+        r = np.minimum(ceil_div_batch(oh[m], nodes[m]) + 2 * halo[m], oh[m])
+        out[m] = per_elem[m] * r * ow[m] * oc[m] * flop_factor[m]
+    m = scheme == Scheme.INW
+    if m.any():
+        c = np.minimum(ceil_div_batch(ow[m], nodes[m]) + 2 * halo[m], ow[m])
+        out[m] = per_elem[m] * oh[m] * c * oc[m] * flop_factor[m]
+    m = scheme == Scheme.OUTC
+    if m.any():
+        ch = ceil_div_batch(oc[m], nodes[m])
+        out[m] = per_elem[m] * oh[m] * ow[m] * ch * flop_factor[m]
+    gmask = scheme == Scheme.GRID2D
+    for nval in np.unique(nodes[gmask]) if gmask.any() else ():
+        m = gmask & (nodes == nval)
+        gh, gw = grid_dims(int(nval))
+        q_r, rem_r = oh[m] // gh, oh[m] % gh
+        q_c, rem_c = ow[m] // gw, ow[m] % gw
+        acc = np.zeros((int(nval), int(m.sum())), np.float64)
+        for j in range(gh * gw):   # round-robin cells, scalar order
+            r = q_r + (j // gw < rem_r)
+            c = q_c + (j % gw < rem_c)
+            rr = np.minimum(r + 2 * halo[m], oh[m])
+            cc = np.minimum(c + 2 * halo[m], ow[m])
+            acc[j % int(nval)] += \
+                per_elem[m] * rr * cc * oc[m] * flop_factor[m]
+        out[m] = acc.max(axis=0)
+    return out
+
+
+def boundary_bytes_same_scheme_batch(scheme: np.ndarray, oh: np.ndarray,
+                                     ow: np.ndarray, oc: np.ndarray,
+                                     nodes: np.ndarray,
+                                     next_k: np.ndarray) -> np.ndarray:
+    """Vector form of :func:`boundary_bytes_same_scheme`.  Non-spatial rows
+    (which the scalar form rejects) yield 0 and must be masked by the
+    caller."""
+    halo = np.maximum(next_k - 1, 0)
+    gh, gw = grid_dims_batch(nodes)
+    rows = np.ceil(oh / gh)
+    cols = np.ceil(ow / gw)
+    vals = np.select(
+        [scheme == Scheme.INH, scheme == Scheme.INW,
+         scheme == Scheme.GRID2D],
+        [2.0 * halo * ow * oc * DTYPE_BYTES,
+         2.0 * halo * oh * oc * DTYPE_BYTES,
+         2.0 * halo * (cols + rows + halo) * oc * DTYPE_BYTES],
+        default=0.0)
+    return np.where((halo == 0) | (nodes <= 1), 0.0, vals)
+
+
+def relayout_bytes_batch(oh: np.ndarray, ow: np.ndarray, oc: np.ndarray,
+                         src: np.ndarray, dst: np.ndarray,
+                         nodes: np.ndarray) -> np.ndarray:
+    """Vector form of :func:`relayout_bytes`."""
+    total = (oh * ow * oc) * DTYPE_BYTES
+    frac_missing = (nodes - 1) / nodes
+    shuffle = (total / nodes) * frac_missing * 2.0
+    return np.select(
+        [dst == Scheme.OUTC, src == Scheme.OUTC, src == dst],
+        [total * frac_missing, shuffle, 0.0],
+        default=shuffle)
 
 
 def relayout_bytes(layer: LayerSpec, src: Scheme, dst: Scheme,

@@ -1,8 +1,16 @@
-"""Gradient-boosted decision trees (squared error) — XGBoost stand-in."""
+"""Gradient-boosted decision trees (squared error) — XGBoost stand-in.
+
+Inference stacks every tree's flat node arrays into padded ``(T, M)``
+matrices and advances all trees over all samples in lockstep: one fancy
+gather + one compare per tree-depth level for the whole forest, instead of
+a Python loop over trees.  ``predict_reference`` retains the per-tree
+accumulation as the parity oracle (``predict`` reproduces its float
+accumulation order exactly, so the two are bit-identical).
+"""
 from __future__ import annotations
 
 import io
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -24,6 +32,7 @@ class GBDTRegressor:
         self.seed = seed
         self.base_: float = 0.0
         self.trees_: List[RegressionTree] = []
+        self._forest: Optional[Tuple[np.ndarray, ...]] = None
 
     # ---- binning ----------------------------------------------------------
     def _make_bins(self, x: np.ndarray) -> List[np.ndarray]:
@@ -52,6 +61,7 @@ class GBDTRegressor:
         self.base_ = float(y.mean())
         pred = np.full_like(y, self.base_)
         self.trees_ = []
+        self._forest = None
         hess = np.ones_like(y)
         for t in range(self.n_estimators):
             grad = pred - y
@@ -76,11 +86,70 @@ class GBDTRegressor:
                 print(msg)
         return self
 
+    # ---- batched forest inference -----------------------------------------
+    def _packed_forest(self) -> Tuple[np.ndarray, ...]:
+        """Pad every tree's flat arrays into ``(T, M)`` matrices (cached).
+        Padding slots are leaves pointing at themselves with value 0, so a
+        finished tree idles harmlessly while deeper trees keep descending."""
+        if self._forest is not None and self._forest[0].shape[0] == \
+                len(self.trees_):
+            return self._forest
+        flats = [tr.flat() for tr in self.trees_]
+        T = len(flats)
+        M = max(len(f[0]) for f in flats)
+        feature = np.zeros((T, M), np.int32)
+        threshold = np.zeros((T, M), np.float64)
+        left = np.zeros((T, M), np.int32)
+        right = np.zeros((T, M), np.int32)
+        value = np.zeros((T, M), np.float64)
+        is_leaf = np.ones((T, M), np.bool_)
+        for t, (f, thr, l, r, v, leaf) in enumerate(flats):
+            m = len(f)
+            feature[t, :m] = np.maximum(f, 0)   # leaf sentinel -1 -> 0
+            threshold[t, :m] = thr
+            left[t, :m] = l
+            right[t, :m] = r
+            value[t, :m] = v
+            is_leaf[t, :m] = leaf
+        self._forest = (feature, threshold, left, right, value, is_leaf)
+        return self._forest
+
     def predict(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, dtype=np.float64)
+        n = x.shape[0]
+        if not self.trees_ or n == 0:
+            return np.full(n, self.base_)
+        feature, threshold, left, right, value, is_leaf = \
+            self._packed_forest()
+        T = len(self.trees_)
+        # flat (tree, sample) state; only still-descending pairs do work,
+        # so the active set shrinks as shallow branches bottom out
+        cur = np.zeros((T, n), np.int32)
+        roots = np.flatnonzero(~is_leaf[:, 0])
+        t_id = roots.repeat(n)
+        col = np.tile(np.arange(n), roots.size)
+        c = cur[t_id, col]
+        while t_id.size:
+            f = feature[t_id, c]
+            go_left = x[col, f] <= threshold[t_id, c]
+            nxt = np.where(go_left, left[t_id, c], right[t_id, c])
+            cur[t_id, col] = nxt
+            keep = ~is_leaf[t_id, nxt]
+            t_id, col, c = t_id[keep], col[keep], nxt[keep]
+        leaf_vals = value[np.arange(T)[:, None], cur]     # (T, n)
+        # accumulate per tree in fit order — bit-identical to the scalar
+        # reference (sum-then-scale would round differently)
+        out = np.full(n, self.base_)
+        for t in range(T):
+            out += self.learning_rate * leaf_vals[t]
+        return out
+
+    def predict_reference(self, x: np.ndarray) -> np.ndarray:
+        """Per-tree scalar-walk prediction — the parity oracle."""
         x = np.asarray(x, dtype=np.float64)
         out = np.full(x.shape[0], self.base_)
         for tree in self.trees_:
-            out += self.learning_rate * tree.predict(x)
+            out += self.learning_rate * tree.predict_reference(x)
         return out
 
     # ---- persistence (npz) -------------------------------------------------

@@ -8,11 +8,19 @@ the standard second-order gain with L2 regularization:
 For squared error, g = (pred - y), h = 1.  Features are pre-binned into
 ``n_bins`` quantile bins once per GBDT fit; split search is a single
 histogram pass per (node, feature).
+
+Inference is vectorized: the ``_Node`` list is flattened into parallel
+numpy arrays (feature / threshold / left / right / value / is_leaf) and a
+whole ``(n, d)`` feature matrix descends the tree in lockstep — the same
+structure-of-arrays layout real histogram-GBDT engines use.  The flat
+arrays also expose the tree to the forest-level batched predictor in
+``gbdt.py``.  ``predict_reference`` keeps the one-sample-at-a-time walk as
+the exactness oracle.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -27,6 +35,23 @@ class _Node:
     is_leaf: bool = True
 
 
+#: Flat structure-of-arrays form of a fitted tree:
+#: (feature i32, threshold f64, left i32, right i32, value f64, is_leaf bool)
+FlatTree = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+                 np.ndarray]
+
+
+def flatten_nodes(nodes: List[_Node]) -> FlatTree:
+    feature = np.fromiter((n.feature for n in nodes), np.int32, len(nodes))
+    threshold = np.fromiter((n.threshold for n in nodes), np.float64,
+                            len(nodes))
+    left = np.fromiter((n.left for n in nodes), np.int32, len(nodes))
+    right = np.fromiter((n.right for n in nodes), np.int32, len(nodes))
+    value = np.fromiter((n.value for n in nodes), np.float64, len(nodes))
+    is_leaf = np.fromiter((n.is_leaf for n in nodes), np.bool_, len(nodes))
+    return feature, threshold, left, right, value, is_leaf
+
+
 class RegressionTree:
     def __init__(self, max_depth: int = 6, min_child_weight: float = 2.0,
                  reg_lambda: float = 1.0, gamma: float = 0.0):
@@ -35,14 +60,23 @@ class RegressionTree:
         self.reg_lambda = reg_lambda
         self.gamma = gamma
         self.nodes: List[_Node] = []
+        self._flat: Optional[FlatTree] = None
 
     # binned: (n, d) int32 bin indices; edges: list of per-feature bin edges
     def fit(self, binned: np.ndarray, edges: List[np.ndarray],
             grad: np.ndarray, hess: np.ndarray) -> "RegressionTree":
         self.nodes = []
+        self._flat = None
         idx = np.arange(binned.shape[0])
         self._build(binned, edges, grad, hess, idx, 0)
         return self
+
+    def flat(self) -> FlatTree:
+        """Structure-of-arrays view of the fitted tree (cached)."""
+        if getattr(self, "_flat", None) is None or \
+                len(self._flat[0]) != len(self.nodes):
+            self._flat = flatten_nodes(self.nodes)
+        return self._flat
 
     def _leaf_value(self, g: float, h: float) -> float:
         return -g / (h + self.reg_lambda)
@@ -97,18 +131,27 @@ class RegressionTree:
         return node_id
 
     def predict(self, x: np.ndarray) -> np.ndarray:
+        """Vectorized prediction: all rows descend the flat-array tree in
+        lockstep (one gather + one compare per depth level)."""
+        feature, threshold, left, right, value, is_leaf = self.flat()
         n = x.shape[0]
-        out = np.zeros(n)
-        stack = [(0, np.arange(n))]
-        while stack:
-            nid, idx = stack.pop()
-            if idx.size == 0:
-                continue
-            node = self.nodes[nid]
-            if node.is_leaf:
-                out[idx] = node.value
-            else:
-                go_left = x[idx, node.feature] <= node.threshold
-                stack.append((node.left, idx[go_left]))
-                stack.append((node.right, idx[~go_left]))
+        cur = np.zeros(n, dtype=np.int32)
+        live = np.flatnonzero(~is_leaf[cur])
+        while live.size:
+            c = cur[live]
+            go_left = x[live, feature[c]] <= threshold[c]
+            cur[live] = np.where(go_left, left[c], right[c])
+            live = live[~is_leaf[cur[live]]]
+        return value[cur]
+
+    def predict_reference(self, x: np.ndarray) -> np.ndarray:
+        """Scalar per-sample tree walk — the parity oracle for ``predict``."""
+        out = np.zeros(x.shape[0])
+        for i in range(x.shape[0]):
+            node = self.nodes[0]
+            while not node.is_leaf:
+                node = self.nodes[node.left
+                                  if x[i, node.feature] <= node.threshold
+                                  else node.right]
+            out[i] = node.value
         return out

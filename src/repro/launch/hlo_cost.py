@@ -37,6 +37,7 @@ _COND_ATTR = re.compile(r"condition=%([\w.\-]+)")
 _BRANCHES = re.compile(r"(?:branch_computations|true_computation|"
                        r"false_computation)=\{?%([\w.\-, %]+)\}?")
 _OPERANDS = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
 
 _COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
              "collective-permute", "ragged-all-to-all")
@@ -116,13 +117,14 @@ class HloCostAnalyzer:
         cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
         if not cm:
             return 2.0 * out_elems
-        # lhs operand shape
+        # lhs operand shape (operands are printed as "f32[64,64]{1,0} %name",
+        # so resolve the first %name token, not a raw "%"-prefixed string)
         opm = _OPERANDS.search(ins.line[ins.line.index(ins.opcode + "("):])
         contract = 1
         if opm:
-            ops = [o.strip() for o in opm.group(1).split(",")]
-            if ops and ops[0].startswith("%"):
-                lhs_type = shapes.get(ops[0][1:], "")
+            names = _OPERAND_NAME.findall(opm.group(1))
+            if names:
+                lhs_type = shapes.get(names[0], "")
                 dims_m = _ARRAY.search(lhs_type)
                 if dims_m and dims_m.group(2):
                     dims = [int(d) for d in dims_m.group(2).split(",") if d]
@@ -139,12 +141,9 @@ class HloCostAnalyzer:
         opm = _OPERANDS.search(ins.line[start:])
         if not opm:
             return []
-        out = []
-        for o in opm.group(1).split(","):
-            o = o.strip()
-            if o.startswith("%") and o[1:] in shapes:
-                out.append(_type_bytes(shapes[o[1:]]))
-        return out
+        return [_type_bytes(shapes[nm])
+                for nm in _OPERAND_NAME.findall(opm.group(1))
+                if nm in shapes]
 
     def _operand_bytes(self, ins: _Instr, shapes: Dict[str, str]) -> int:
         return sum(self._operand_bytes_list(ins, shapes))

@@ -13,7 +13,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cost import Testbed, Topology, compute_time_s, sync_time_s
+from repro.core.cost import (Testbed, Topology, compute_time_batch_s,
+                             sync_time_batch_s)
 from repro.core.estimator import (GBDTEstimator, i_features, s_features)
 from repro.core.graph import ConvT, LayerSpec
 from repro.core.partition import ALL_SCHEMES, Scheme
@@ -72,10 +73,18 @@ def _random_testbed(rng: np.random.Generator, cfg: TraceConfig) -> Testbed:
 
 
 def generate_i_traces(cfg: TraceConfig) -> Tuple[np.ndarray, np.ndarray]:
-    """i-Estimator traces: features -> log(compute seconds)."""
+    """i-Estimator traces: features -> log(compute seconds).
+
+    Sampling stays scalar (it drives the RNG stream, kept draw-for-draw
+    identical to the historical loop), but the tens of thousands of
+    ground-truth times come from **one** ``compute_time_batch_s`` call.
+    A spatial scheme is required for a nonzero halo, so every sampled
+    configuration is valid by construction.
+    """
     rng = np.random.default_rng(cfg.seed)
     xs: List[List[float]] = []
-    ys: List[float] = []
+    factors: List[float] = []
+    noise: List[float] = []
     while len(xs) < cfg.n_samples:
         layer = _random_layer(rng)
         tb = _random_testbed(rng, cfg)
@@ -83,21 +92,22 @@ def generate_i_traces(cfg: TraceConfig) -> Tuple[np.ndarray, np.ndarray]:
         halo = 0
         if scheme.spatial and rng.random() < 0.4:
             halo = int(rng.integers(1, 5))
-        try:
-            t = compute_time_s(layer, scheme, tb, extra_halo=halo)
-        except ValueError:
-            continue
-        t *= float(np.exp(rng.normal(0.0, cfg.noise_sigma)))
+        noise.append(float(np.exp(rng.normal(0.0, cfg.noise_sigma))))
         xs.append(i_features(layer, scheme, tb, halo))
-        ys.append(np.log(max(t, 1e-9)))
-    return np.asarray(xs), np.asarray(ys)
+        factors.append(layer.extra_flop_factor)
+    X = np.asarray(xs)
+    t = compute_time_batch_s(X, Testbed(), np.asarray(factors)) \
+        * np.asarray(noise)
+    return X, np.log(np.maximum(t, 1e-9))
 
 
 def generate_s_traces(cfg: TraceConfig) -> Tuple[np.ndarray, np.ndarray]:
-    """s-Estimator traces: features -> log(sync seconds)."""
+    """s-Estimator traces: features -> log(sync seconds).  Same structure
+    as :func:`generate_i_traces`: scalar sampling, one batched
+    ``sync_time_batch_s`` evaluation."""
     rng = np.random.default_rng(cfg.seed + 1)
     xs: List[List[float]] = []
-    ys: List[float] = []
+    noise: List[float] = []
     while len(xs) < cfg.n_samples:
         layer = _random_layer(rng)
         tb = _random_testbed(rng, cfg)
@@ -107,11 +117,11 @@ def generate_s_traces(cfg: TraceConfig) -> Tuple[np.ndarray, np.ndarray]:
         else:
             nxt = _random_layer(rng)
             dst = Scheme(int(rng.integers(0, 4)))
-        t = sync_time_s(layer, nxt, src, dst, tb)
-        t *= float(np.exp(rng.normal(0.0, cfg.noise_sigma)))
+        noise.append(float(np.exp(rng.normal(0.0, cfg.noise_sigma))))
         xs.append(s_features(layer, nxt, src, dst, tb))
-        ys.append(np.log(max(t, 1e-9)))
-    return np.asarray(xs), np.asarray(ys)
+    X = np.asarray(xs)
+    t = sync_time_batch_s(X, Testbed()) * np.asarray(noise)
+    return X, np.log(np.maximum(t, 1e-9))
 
 
 def train_estimators(cfg: Optional[TraceConfig] = None,

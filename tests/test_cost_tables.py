@@ -1,0 +1,119 @@
+"""Batched cost paths vs the scalar reference: bit-parity everywhere.
+
+The planner's correctness story is layered: (1) each estimator's
+``*_cost_batch`` bit-matches its scalar protocol, (2) the cost tables hold
+exactly those values, (3) the batched DP replicates the scalar
+tie-breaking.  These tests pin layer (1) and (2); ``test_dpp``/``test_dag``
+pin layer (3) end to end.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (ALL_SCHEMES, AnalyticEstimator, PrefetchedEstimator,
+                        Scheme, Testbed, Topology, build_chain_tables, chain,
+                        plan_cost, plan_feasible)
+from repro.core.estimator import i_features, s_features
+from repro.core.exhaustive import enumerate_plans
+from repro.core.graph import halo_growth
+from repro.sim.trace import TraceConfig, _random_layer, _random_testbed
+
+EST = AnalyticEstimator()
+
+
+def _sample_cases(n, seed=0):
+    rng = np.random.default_rng(seed)
+    cfg = TraceConfig()
+    for _ in range(n):
+        layer = _random_layer(rng)
+        tb = _random_testbed(rng, cfg)
+        yield rng, layer, tb
+
+
+def test_analytic_i_batch_bit_matches_scalar():
+    rows, factors, want = [], [], []
+    for rng, layer, tb in _sample_cases(600):
+        scheme = Scheme(int(rng.integers(0, 4)))
+        halo = int(rng.integers(1, 5)) if (scheme.spatial
+                                           and rng.random() < 0.5) else 0
+        rows.append(i_features(layer, scheme, tb, halo))
+        factors.append(layer.extra_flop_factor)
+        want.append(EST.i_cost(layer, scheme, tb, extra_halo=halo))
+    got = EST.i_cost_batch(np.asarray(rows), Testbed(), np.asarray(factors))
+    assert np.array_equal(got, np.asarray(want))
+
+
+def test_analytic_s_batch_bit_matches_scalar():
+    rows, want = [], []
+    for rng, layer, tb in _sample_cases(600, seed=1):
+        src = Scheme(int(rng.integers(0, 4)))
+        if rng.random() < 0.15:
+            nxt, dst = None, None
+        else:
+            nxt = _random_layer(rng)
+            dst = Scheme(int(rng.integers(0, 4)))
+        rows.append(s_features(layer, nxt, src, dst, tb))
+        want.append(EST.s_cost(layer, nxt, src, dst, tb))
+    got = EST.s_cost_batch(np.asarray(rows), Testbed())
+    assert np.array_equal(got, np.asarray(want))
+
+
+def _rand_chain(rng, n):
+    from repro.core.graph import ConvT, LayerSpec
+    layers = []
+    h, c = rng.choice([14, 28, 56]), rng.choice([16, 32])
+    for i in range(n):
+        t = rng.choice([ConvT.CONV, ConvT.POINTWISE, ConvT.DWCONV])
+        k, s, p = {ConvT.CONV: (3, 1, 1), ConvT.POINTWISE: (1, 1, 0),
+                   ConvT.DWCONV: (3, 1, 1)}[t]
+        cout = c if t == ConvT.DWCONV else rng.choice([c, 2 * c])
+        layers.append(LayerSpec(f"l{i}", t, h, h, c, cout, k, s, p))
+        h, c = layers[-1].out_h, cout
+    return chain("rand", layers)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_chain_tables_hold_scalar_values(seed):
+    """Every finite ``seg`` entry equals the scalar i-cost sum; every
+    boundary entry equals the scalar s-cost."""
+    rng = random.Random(seed)
+    g = _rand_chain(rng, rng.randint(3, 8))
+    tb = Testbed(nodes=rng.choice([3, 4, 5]))
+    tbl, _, _ = build_chain_tables(g.layers, EST, tb, ALL_SCHEMES,
+                                   max_segment=32, allow_fusion=True)
+    n = len(g.layers)
+    for i in range(n):
+        for pi, p in enumerate(ALL_SCHEMES):
+            for L in range(tbl.seg.shape[2]):
+                v = tbl.seg[i, pi, L]
+                if v == float("inf"):
+                    continue
+                b = i + L
+                halos = halo_growth(g.layers[i:b + 1], L)
+                want = 0.0
+                for off, m in enumerate(range(i, b + 1)):
+                    want += EST.i_cost(g.layers[m], p, tb,
+                                       extra_halo=halos[off] if L else 0)
+                assert v == want
+    for b in range(n - 1):
+        for pi, p in enumerate(ALL_SCHEMES):
+            for qi, q in enumerate(ALL_SCHEMES):
+                assert tbl.sbound[b, pi, qi] == \
+                    EST.s_cost(g.layers[b], g.layers[b + 1], p, q, tb)
+    for pi, p in enumerate(ALL_SCHEMES):
+        assert tbl.s_final[pi] == EST.s_cost(g.layers[-1], None, p, None, tb)
+
+
+def test_prefetched_estimator_scores_plans_exactly():
+    rng = random.Random(7)
+    g = _rand_chain(rng, 4)
+    tb = Testbed(nodes=4, bandwidth_gbps=1.0)
+    pf = PrefetchedEstimator.for_graph(g, EST, tb)
+    checked = 0
+    for plan in enumerate_plans(len(g)):
+        if not plan_feasible(g, plan, tb.nodes):
+            continue
+        assert plan_cost(g, plan, pf, tb) == plan_cost(g, plan, EST, tb)
+        checked += 1
+    assert checked > 50

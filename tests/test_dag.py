@@ -159,6 +159,20 @@ def test_dag_dpp_matches_exhaustive(model, seed):
     assert plan_feasible(g, res.plan, tb.nodes)
 
 
+@pytest.mark.parametrize("model", list(DAGS))
+@pytest.mark.parametrize("nodes", [3, 4, 5])
+def test_dag_batched_search_bit_matches_reference(model, nodes):
+    """Batched DAG composition returns the scalar reference's exact plan
+    and cost on the branched configs."""
+    from repro.core import plan_search_reference
+    g = DAGS[model]()
+    tb = Testbed(nodes=nodes, bandwidth_gbps=1.0)
+    res = plan_search(g, EST, tb)
+    ref = plan_search_reference(g, EST, tb)
+    assert res.plan == ref.plan
+    assert res.cost == ref.cost
+
+
 def test_dag_cost_reduces_to_chain_cost():
     """On a single-branch graph the DAG semantics equal the chain ones."""
     layers = (

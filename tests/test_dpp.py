@@ -1,13 +1,16 @@
-"""DPP vs exhaustive oracle (Theorem 1) + baseline dominance properties."""
+"""DPP vs exhaustive oracle (Theorem 1) + baseline dominance properties,
+plus bit-parity of the batched planner against the scalar reference."""
 import random
 
 import pytest
 
-from repro.core import (ALL_SCHEMES, AnalyticEstimator, Testbed, Topology,
-                        chain, plan_cost, plan_search)
+from repro.core import (ALL_SCHEMES, AnalyticEstimator, Scheme, Testbed,
+                        Topology, chain, plan_cost, plan_search,
+                        plan_search_reference)
 from repro.core.baselines import all_solutions, performance_scores
 from repro.core.exhaustive import exhaustive_search
 from repro.core.graph import ConvT, LayerSpec
+from repro.configs.edge_models import EDGE_MODELS
 
 EST = AnalyticEstimator()
 
@@ -66,6 +69,54 @@ def test_pruning_reduces_calls():
     # exhaustive space is (k*2)^(n-1)*k ~ 8^9; DPP must stay polynomial
     assert res.stats.i_calls + res.stats.s_calls < 20_000
     assert res.stats.pruned_threshold + res.stats.pruned_halo > 0
+
+
+@pytest.mark.parametrize("model", list(EDGE_MODELS))
+def test_batched_search_bit_matches_reference(model):
+    """The batched table-driven DP returns the exact plan and cost of the
+    scalar reference on every benchmark model (chain and DAG)."""
+    g = EDGE_MODELS[model]()
+    tb = Testbed(nodes=4, bandwidth_gbps=1.0)
+    res = plan_search(g, EST, tb)
+    ref = plan_search_reference(g, EST, tb)
+    assert res.plan == ref.plan
+    assert res.cost == ref.cost
+    # batching collapses duplicate queries: never more estimator rows than
+    # the reference makes scalar calls
+    assert res.stats.i_calls <= ref.stats.i_calls
+    assert res.stats.s_calls <= ref.stats.s_calls
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_batched_search_matches_reference_random(seed):
+    """Parity under random graphs, node counts, topologies and the
+    restricted search modes the baselines use."""
+    rng = random.Random(1000 + seed)
+    g = _rand_graph(rng, rng.randint(2, 12))
+    tb = Testbed(nodes=rng.choice([1, 3, 4, 5]),
+                 bandwidth_gbps=rng.choice([0.5, 1.0, 5.0]),
+                 topology=Topology(rng.randint(0, 2)))
+    for kw in ({}, {"allow_fusion": False}, {"schemes": (Scheme.INH,)},
+               {"schemes": (Scheme.OUTC,)}, {"max_segment": 3}):
+        res = plan_search(g, EST, tb, **kw)
+        ref = plan_search_reference(g, EST, tb, **kw)
+        assert res.plan == ref.plan, kw
+        assert res.cost == ref.cost, kw
+
+
+def test_batched_stats_stay_meaningful():
+    """SearchStats under the batched path: counters derived from the table
+    masks keep their roles (states enumerated, entries evaluated, both
+    prune families firing on a fusion-heavy conv chain)."""
+    rng = random.Random(7)
+    g = _rand_graph(rng, 10)
+    tb = Testbed(nodes=4)
+    st = plan_search(g, EST, tb).stats
+    assert st.states == len(g) * len(ALL_SCHEMES)
+    assert 0 < st.i_calls and 0 < st.s_calls
+    assert st.pruned_halo > 0
+    ref = plan_search_reference(g, EST, tb).stats
+    assert st.i_calls <= ref.i_calls and st.s_calls <= ref.s_calls
 
 
 def test_layerwise_beats_fixed_on_heterogeneous_graph():

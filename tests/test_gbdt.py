@@ -44,6 +44,68 @@ def test_gbdt_monotone_improvement():
     assert errs[0] > errs[1] > errs[2]
 
 
+def test_tree_vectorized_predict_bit_matches_reference():
+    """The flat-array lockstep traversal lands in exactly the scalar
+    walk's leaves on every tree of a fitted forest."""
+    x, y = _toy(1500, seed=4)
+    m = GBDTRegressor(n_estimators=15, max_depth=6).fit(x, y)
+    xt, _ = _toy(700, seed=5)
+    for tree in m.trees_:
+        assert np.array_equal(tree.predict(xt), tree.predict_reference(xt))
+
+
+def test_forest_vectorized_predict_bit_matches_reference():
+    x, y = _toy(1500, seed=6)
+    m = GBDTRegressor(n_estimators=25, max_depth=5).fit(x, y)
+    xt, _ = _toy(400, seed=7)
+    assert np.array_equal(m.predict(xt), m.predict_reference(xt))
+    # single row (the scalar estimator path) and empty batch
+    assert np.array_equal(m.predict(xt[:1]), m.predict_reference(xt[:1]))
+    assert m.predict(xt[:0]).shape == (0,)
+
+
+def test_forest_predict_exact_after_save_load(tmp_path):
+    x, y = _toy(800, seed=8)
+    m = GBDTRegressor(n_estimators=10, max_depth=4).fit(x, y)
+    p = str(tmp_path / "m.npz")
+    m.save(p)
+    m2 = GBDTRegressor.load(p)
+    xt, _ = _toy(300, seed=9)
+    assert np.array_equal(m2.predict(xt), m2.predict_reference(xt))
+
+
+def test_gbdt_estimator_batch_bit_matches_scalar():
+    """GBDTEstimator.i_cost_batch / s_cost_batch equal the scalar protocol
+    exactly (one exp(predict) per row either way)."""
+    from repro.core import GBDTEstimator, Scheme, Testbed
+    from repro.core.estimator import i_features, s_features
+    from repro.sim.trace import TraceConfig, _random_layer, _random_testbed
+
+    rng = np.random.default_rng(11)
+    xi = rng.uniform(0, 200, size=(1200, 16))
+    xs = rng.uniform(0, 200, size=(1200, 18))
+    est = GBDTEstimator(
+        GBDTRegressor(n_estimators=10, max_depth=4).fit(xi, rng.normal(size=1200)),
+        GBDTRegressor(n_estimators=10, max_depth=4).fit(xs, rng.normal(size=1200)))
+    cfg = TraceConfig()
+    irows, srows, i_want, s_want = [], [], [], []
+    for _ in range(100):
+        layer = _random_layer(rng)
+        tb = _random_testbed(rng, cfg)
+        sch = Scheme(int(rng.integers(0, 4)))
+        halo = int(rng.integers(0, 4)) if sch.spatial else 0
+        irows.append(i_features(layer, sch, tb, halo))
+        i_want.append(est.i_cost(layer, sch, tb, extra_halo=halo))
+        nxt = _random_layer(rng)
+        dst = Scheme(int(rng.integers(0, 4)))
+        srows.append(s_features(layer, nxt, sch, dst, tb))
+        s_want.append(est.s_cost(layer, nxt, sch, dst, tb))
+    assert np.array_equal(est.i_cost_batch(np.asarray(irows), Testbed()),
+                          np.asarray(i_want))
+    assert np.array_equal(est.s_cost_batch(np.asarray(srows), Testbed()),
+                          np.asarray(s_want))
+
+
 def test_estimator_training_end_to_end():
     """Traces -> GBDT -> DPP: plan must stay near the analytic optimum."""
     from repro.core import AnalyticEstimator, Testbed
