@@ -13,13 +13,16 @@ def main(argv: list[str] | None = None) -> None:
 
     from . import (engine_comm, estimator_quality, fig2_microbench,
                    fig7_fig9_comparison, fig8_score, roofline_table,
-                   search_time, tpu_ce)
+                   search_time, sweep, tpu_ce)
     print("name,us_per_call,derived")
     fig2_microbench.run()
     fig7_fig9_comparison.run(4, "fig7")
     fig7_fig9_comparison.run(3, "fig9")
     fig8_score.run()
     search_time.run(json_path=json_path)
+    # heterogeneous-cluster scale sweep, reduced grid (full grid + JSON via
+    # benchmarks.sweep --json)
+    sweep.run(smoke=True)
     engine_comm.run()
     # data-driven CE: small trace budget by default (full 330K via
     # benchmarks.estimator_quality --full)

@@ -1,0 +1,144 @@
+"""Scale sweep: nodes x cluster preset x model — plan quality + search time.
+
+The ROADMAP's "search at larger scale" benchmark: for every cluster preset
+(uniform, DistrEdge-style mixed fast/slow, stepped capability ramp,
+asymmetric uplink) and node count in 2..16, run the capability-weighted
+DPP on each benchmark model and record
+
+* planner wall time (batched tables end to end),
+* plan cost under capability-weighted sharding vs. the best
+  homogeneous-assumption even-split plan on the same silicon
+  (``even_over_weighted`` >= 1; the capability win),
+* Theorem-1 parity vs. the exhaustive oracle on a reduced proxy graph
+  (exhaustive on full models is infeasible; the proxy shares the DP
+  semantics),
+* discrete-event simulator cross-checks at a fixed node count: pipelined
+  steady-state throughput, p50/p99 latency, and the single-request
+  sim/analytic ratio.
+
+The harness *asserts* oracle parity on every preset and that weighted
+plans beat even-split plans on at least one heterogeneous preset per
+model.  ``--json [PATH]`` writes ``BENCH_sweep.json`` (the CI artifact);
+``--smoke`` shrinks the grid for the CI smoke job.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.cluster import (CLUSTER_PRESETS, ClusterAnalyticEstimator,
+                           cluster_plan_search, simulate)
+from repro.configs.edge_models import EDGE_MODELS
+from repro.core.exhaustive import exhaustive_search
+from repro.core.graph import ConvT, LayerSpec, chain
+
+from .common import emit, time_call
+
+#: proxy graph for the exhaustive oracle (2 * 4**5 plans — tractable)
+def _oracle_graph():
+    return chain("oracle5", [
+        LayerSpec("c0", ConvT.CONV, 24, 24, 3, 8, 3, 1, 1),
+        LayerSpec("dw", ConvT.DWCONV, 24, 24, 8, 8, 3, 1, 1),
+        LayerSpec("pw", ConvT.POINTWISE, 24, 24, 8, 16, 1, 1, 0),
+        LayerSpec("c1", ConvT.CONV, 24, 24, 16, 16, 3, 2, 1),
+        LayerSpec("c2", ConvT.CONV, 12, 12, 16, 8, 3, 1, 1),
+    ])
+
+
+def _sim_rec(g, cluster, plan, analytic_cost: float,
+             n_requests: int) -> dict:
+    one = simulate(g, plan, cluster, n_requests=1)
+    many = simulate(g, plan, cluster, n_requests=n_requests)
+    return {
+        "sim_latency_ms": one.latencies_s[0] * 1e3,
+        "sim_over_analytic": one.latencies_s[0] / analytic_cost,
+        "throughput_rps": many.throughput_rps,
+        "p50_ms": many.p50_latency_s * 1e3,
+        "p99_ms": many.p99_latency_s * 1e3,
+        "pipeline_speedup": many.throughput_rps * analytic_cost,
+    }
+
+
+def run(json_path: str | None = None, smoke: bool = False) -> dict:
+    node_grid = [2, 4, 6] if smoke else list(range(2, 17))
+    models = (["mobilenet", "resnet18", "inception"] if smoke
+              else list(EDGE_MODELS))
+    sim_nodes = 4
+    sim_requests = 8 if smoke else 16
+    oracle = _oracle_graph()
+
+    out: dict = {"grid": {"nodes": node_grid, "models": models,
+                          "presets": list(CLUSTER_PRESETS)},
+                 "presets": {}}
+    weighted_wins: dict = {m: False for m in models}
+
+    for pname, mk in CLUSTER_PRESETS.items():
+        prec: dict = {"oracle": {}, "models": {}}
+        out["presets"][pname] = prec
+
+        # Theorem-1 parity vs the exhaustive oracle, every node count
+        for nodes in node_grid:
+            cl = mk(nodes)
+            est = ClusterAnalyticEstimator(cl)
+            tb = cl.compat_testbed()
+            res = cluster_plan_search(oracle, cl)
+            _, ex_cost = exhaustive_search(oracle, est, tb)
+            gap = abs(res.cost - ex_cost) / ex_cost
+            assert gap < 1e-12, (
+                f"{pname}/n{nodes}: DPP missed the oracle optimum "
+                f"({res.cost} vs {ex_cost})")
+            prec["oracle"][nodes] = {"dp_cost_ms": res.cost * 1e3,
+                                     "exhaustive_cost_ms": ex_cost * 1e3,
+                                     "rel_gap": gap}
+
+        for model in models:
+            g = EDGE_MODELS[model]()
+            rows = {}
+            for nodes in node_grid:
+                cl = mk(nodes)
+                us, res = time_call(
+                    lambda cl=cl: cluster_plan_search(g, cl),
+                    repeats=1 if smoke else 3)
+                even = cluster_plan_search(g, cl, weighted=False)
+                ratio = even.cost / res.cost
+                assert ratio >= 1.0 - 1e-12, (
+                    f"{pname}/{model}/n{nodes}: weighted plan worse than "
+                    f"even split ({res.cost} vs {even.cost})")
+                if pname != "uniform" and ratio > 1.0 + 1e-9:
+                    weighted_wins[model] = True
+                rows[nodes] = {
+                    "planner_us": round(us, 1),
+                    "weighted_cost_ms": res.cost * 1e3,
+                    "even_cost_ms": even.cost * 1e3,
+                    "even_over_weighted": round(ratio, 4),
+                    "i_rows": res.stats.i_calls,
+                    "s_rows": res.stats.s_calls,
+                    "memory_ok": all(cl.memory_ok(g)),
+                }
+                if nodes == sim_nodes:
+                    rows[nodes].update(_sim_rec(g, cl, res.plan, res.cost,
+                                                sim_requests))
+            prec["models"][model] = rows
+            mid = sim_nodes if sim_nodes in rows else node_grid[0]
+            emit(f"sweep/{pname}/{model}", rows[mid]["planner_us"],
+                 f"nodes={mid};even_over_weighted="
+                 f"{rows[mid]['even_over_weighted']};"
+                 f"throughput_rps={rows[mid].get('throughput_rps', 0):.1f}")
+
+    assert all(weighted_wins.values()), (
+        f"capability-weighted plans never beat even splits for "
+        f"{[m for m, w in weighted_wins.items() if not w]}")
+    out["weighted_beats_even_per_model"] = weighted_wins
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote {json_path}", file=sys.stderr)
+    return out
+
+
+if __name__ == "__main__":
+    from .common import json_arg
+    argv = sys.argv[1:]
+    run(json_path=json_arg(argv, default="BENCH_sweep.json"),
+        smoke="--smoke" in argv)

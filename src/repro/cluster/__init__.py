@@ -1,0 +1,44 @@
+"""Heterogeneous cluster subsystem: specs, weighted costing, simulator.
+
+Quick start::
+
+    from repro.cluster import mixed_fast_slow, cluster_plan_search, simulate
+    cluster = mixed_fast_slow(6)            # 2 fast + 4 slow devices
+    res = cluster_plan_search(graph, cluster)
+    rep = simulate(graph, res.plan, cluster, n_requests=32)
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.dpp import SearchResult, plan_search
+from repro.core.graph import ModelGraph
+from repro.core.partition import ALL_SCHEMES, Scheme
+
+from .estimator import ClusterAnalyticEstimator
+from .simsched import SimReport, Stage, build_stages, simulate
+from .spec import (CLUSTER_PRESETS, ClusterSpec, DeviceSpec, LinkSpec,
+                   asym_uplink, homogeneous, mixed_fast_slow, stepped,
+                   topology_edges)
+
+
+def cluster_plan_search(graph: ModelGraph, cluster: ClusterSpec,
+                        weighted: bool = True,
+                        schemes: Sequence[Scheme] = ALL_SCHEMES,
+                        max_segment: int = 32,
+                        allow_fusion: bool = True) -> SearchResult:
+    """DPP over a cluster: batched tables throughout (the cluster estimator
+    implements the full batched protocol, so heterogeneous layouts never
+    fall back to scalar calls).  ``weighted=False`` plans with even shard
+    fractions on the same silicon — the homogeneous-assumption baseline."""
+    est = ClusterAnalyticEstimator(cluster, weighted=weighted)
+    return plan_search(graph, est, cluster.compat_testbed(), schemes=schemes,
+                       max_segment=max_segment, allow_fusion=allow_fusion)
+
+
+__all__ = [
+    "CLUSTER_PRESETS", "ClusterAnalyticEstimator", "ClusterSpec",
+    "DeviceSpec", "LinkSpec", "SimReport", "Stage", "asym_uplink",
+    "build_stages", "cluster_plan_search", "homogeneous", "mixed_fast_slow",
+    "simulate", "stepped", "topology_edges",
+]

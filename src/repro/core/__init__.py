@@ -1,8 +1,11 @@
 """FlexPie core: flexible combinatorial optimization for model partition."""
 from .graph import (GRAPH_INPUT, Branch, ConvT, LayerSpec, ModelGraph, chain,
                     halo_growth)
-from .partition import ALL_SCHEMES, Mode, Scheme
-from .cost import Testbed, Topology
+from .partition import (ALL_SCHEMES, Mode, Scheme, hetero_shard_work,
+                        weighted_split_sizes)
+from .cost import (Testbed, Topology, hetero_compute_time_batch_s,
+                   hetero_compute_time_s, hetero_device_times_s,
+                   sync_bytes_messages)
 from .estimator import (AnalyticEstimator, BatchedCostEstimator,
                         CostEstimator, GBDTEstimator)
 from .cost_tables import (ChainTables, CostTableBuilder, PrefetchedEstimator,
@@ -16,6 +19,9 @@ from . import baselines
 __all__ = [
     "GRAPH_INPUT", "Branch", "ConvT", "LayerSpec", "ModelGraph", "chain",
     "halo_growth", "ALL_SCHEMES", "Mode", "Scheme", "Testbed", "Topology",
+    "hetero_compute_time_batch_s", "hetero_compute_time_s",
+    "hetero_device_times_s", "hetero_shard_work", "sync_bytes_messages",
+    "weighted_split_sizes",
     "AnalyticEstimator", "BatchedCostEstimator", "CostEstimator",
     "GBDTEstimator", "ChainTables", "CostTableBuilder",
     "PrefetchedEstimator", "build_chain_tables", "Plan", "dag_plan_cost",

@@ -20,6 +20,14 @@ Three consumers:
   walks plans scalar-wise (the exhaustive oracle, fixed-plan baselines);
 * ``repro.sim.trace`` — trace generation uses the same batched estimator
   entry points directly.
+
+Heterogeneous clusters ride the same pipeline: a
+``repro.cluster.ClusterAnalyticEstimator`` implements the full batched
+protocol (capability-weighted straggler i-costs, busiest-link s-costs), so
+table building, the DP, and the prefetched oracle all run batched on
+heterogeneous layouts — no scalar fallback.  Pass
+``cluster.compat_testbed()`` as ``tb``; its node count / topology /
+bottleneck link populate the feature columns.
 """
 from __future__ import annotations
 

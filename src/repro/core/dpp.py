@@ -399,7 +399,14 @@ def _dag_compose(graph: ModelGraph, schemes: Tuple[Scheme, ...],
         fork-delivery costs sum; merge deliveries combine with max.  Exact:
         enumerate which delivery attains the max, pin it, and let every
         other branch independently take its cheapest option whose delivery
-        fits under it."""
+        fits under it.
+
+        The candidate scan is vectorized over the (branch x tail-scheme)
+        option tables: one (candidate, branch, scheme) feasibility tensor,
+        first-min reductions matching the scalar tie-breaking, and a
+        branch-ordered accumulation that keeps totals bit-identical to the
+        historical per-candidate loop (matters for wide Inception-style
+        bundles, where candidates x branches x schemes dominates)."""
         key = (t, pt_i, qm_i)
         hit = bundle_memo.get(key)
         if hit is not None:
@@ -412,48 +419,58 @@ def _dag_compose(graph: ModelGraph, schemes: Tuple[Scheme, ...],
             res = (d0 if d0 is not None else 0.0, [])
             bundle_memo[key] = res
             return res
-        opts: List[List[Tuple[float, float, int, int]]] = []
-        for b in ints:
+        nb = len(ints)
+        # option tables, indexed by tail-scheme pti (inf = infeasible)
+        C = np.full((nb, k), _INF)    # fork delivery + branch internal cost
+        D = np.full((nb, k), _INF)    # merge delivery cost
+        PH = np.full((nb, k), -1, np.int64)
+        for bi, b in enumerate(ints):
             tail_id = branches[b].tail
-            o = []
             for pti in range(k):
                 c, ph_i = ib_entry(b, pt_i, pti)
                 if c == _INF:
                     continue
-                d = jscost(tail_id, merge_id, pti, qm_i)
-                o.append((c, d, ph_i, pti))
-            if not o:
+                C[bi, pti] = c
+                D[bi, pti] = jscost(tail_id, merge_id, pti, qm_i)
+                PH[bi, pti] = ph_i
+            if not np.isfinite(C[bi]).any():
                 bundle_memo[key] = (_INF, None)
                 return (_INF, None)
-            opts.append(o)
-        candidates: List[Tuple[float, int, int]] = []
+        # candidates for "which delivery attains the merge max", in the
+        # scalar scan order: the direct skip edge first, then options
+        # branch-major / scheme-minor
+        fbi, foi = np.nonzero(np.isfinite(C))
+        m_vec = D[fbi, foi]
+        fb = fbi
+        fo = foi
         if d0 is not None:
-            candidates.append((d0, -1, -1))
-        for bi, o in enumerate(opts):
-            for oi, (_, d, _, _) in enumerate(o):
-                candidates.append((d, bi, oi))
-        best_total, best_assign = _INF, None
-        for m, fbi, foi in candidates:
-            if d0 is not None and d0 > m:
-                continue
-            total, assign, ok = m, [], True
-            for bi, o in enumerate(opts):
-                if bi == fbi:
-                    c, _, ph_i, pti = o[foi]
-                    total += c
-                    assign.append((ints[bi], ph_i, pti))
-                    continue
-                bc, ba = _INF, None
-                for c, d, ph_i, pti in o:
-                    if d <= m and c < bc:
-                        bc, ba = c, (ints[bi], ph_i, pti)
-                if ba is None:
-                    ok = False
-                    break
-                total += bc
-                assign.append(ba)
-            if ok and total < best_total:
-                best_total, best_assign = total, assign
+            m_vec = np.concatenate(([d0], m_vec))
+            fb = np.concatenate(([-1], fb))
+            fo = np.concatenate(([-1], fo))
+        feas = D[None, :, :] <= m_vec[:, None, None]
+        cm = np.where(feas, C[None, :, :], _INF)
+        best_oi = np.argmin(cm, axis=2)               # first min, pti order
+        bc = np.take_along_axis(cm, best_oi[:, :, None], 2)[:, :, 0]
+        bc_eff = bc.copy()
+        rows = np.arange(len(m_vec))
+        pin = fb >= 0
+        bc_eff[rows[pin], fb[pin]] = C[fb[pin], fo[pin]]
+        valid = np.isfinite(bc).all(axis=1)
+        if d0 is not None:
+            valid &= d0 <= m_vec
+        totals = m_vec.copy()
+        for bi in range(nb):          # branch order = scalar accumulation
+            totals = totals + bc_eff[:, bi]
+        totals = np.where(valid, totals, _INF)
+        win = int(np.argmin(totals))
+        best_total = float(totals[win])
+        if best_total == _INF:
+            bundle_memo[key] = (_INF, None)
+            return (_INF, None)
+        best_assign = []
+        for bi in range(nb):
+            pti = int(fo[win]) if bi == fb[win] else int(best_oi[win, bi])
+            best_assign.append((ints[bi], int(PH[bi, pti]), pti))
         bundle_memo[key] = (best_total, best_assign)
         return best_total, best_assign
 

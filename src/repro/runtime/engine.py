@@ -21,6 +21,7 @@ reassembled output is identical to the unpartitioned reference inference.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -67,25 +68,32 @@ def apply_layer(l: LayerSpec, w, x: jnp.ndarray) -> jnp.ndarray:
 
 
 def _conv_region(l: LayerSpec, w, x: jnp.ndarray, pads) -> jnp.ndarray:
-    if l.conv_t in (ConvT.CONV, ConvT.POINTWISE):
+    return _conv_region_p(l.conv_t, l.k, l.s, w, x, pads)
+
+
+def _conv_region_p(conv_t: ConvT, k: int, s: int, w, x: jnp.ndarray,
+                   pads) -> jnp.ndarray:
+    """Parameter form of :func:`_conv_region` — shared with the jitted
+    segment programs, whose cache keys are name-blind geometry tuples."""
+    if conv_t in (ConvT.CONV, ConvT.POINTWISE):
         return jax.lax.conv_general_dilated(
-            x[None], w, (l.s, l.s), list(pads),
+            x[None], w, (s, s), list(pads),
             dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
-    if l.conv_t == ConvT.DWCONV:
+    if conv_t == ConvT.DWCONV:
         return jax.lax.conv_general_dilated(
-            x[None], w, (l.s, l.s), list(pads),
+            x[None], w, (s, s), list(pads),
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
             feature_group_count=x.shape[-1])[0]
-    if l.conv_t == ConvT.POOL:
+    if conv_t == ConvT.POOL:
         return jax.lax.reduce_window(
-            x, -jnp.inf, jax.lax.max, (l.k, l.k, 1), (l.s, l.s, 1),
+            x, -jnp.inf, jax.lax.max, (k, k, 1), (s, s, 1),
             [tuple(pads[0]), tuple(pads[1]), (0, 0)])
-    if l.conv_t == ConvT.FC:
+    if conv_t == ConvT.FC:
         return (x.reshape(x.shape[0], x.shape[-1]) @ w).reshape(
             x.shape[0], 1, -1)
-    if l.conv_t in (ConvT.ADD, ConvT.CONCAT):
+    if conv_t in (ConvT.ADD, ConvT.CONCAT):
         return x   # single-input (chain-compat) merge is the identity
-    raise ValueError(l.conv_t)
+    raise ValueError(conv_t)
 
 
 def merge_tensors(l: LayerSpec, inputs: Sequence[jnp.ndarray]) -> jnp.ndarray:
@@ -192,13 +200,103 @@ def _rect_isect(a: Rect, b: Rect) -> Rect:
                  for x, y in zip(a, b))  # type: ignore[return-value]
 
 
+# ---------------------------------------------------------------------------
+# Compiled shard segment programs.
+#
+# One jitted program per *name-blind segment signature*: the per-layer conv
+# parameters plus the static pad/slice/channel arithmetic of this cell's
+# backward-chained regions.  Identical cells — every interior node of a
+# balanced split, and every repetition of a ResNet bottleneck across blocks
+# and planner sweeps — share one compiled executable; weights and the input
+# tensor are traced arguments, so reuse survives weight changes.
+# ---------------------------------------------------------------------------
+
+#: per-layer static record: (conv_t, k, s, pads(pt,pb,pl,pr) | None,
+#: slices(r0,r1,c0,c1) | None, chans(c0,c1))
+_SegRec = Tuple[int, int, int, Optional[Tuple[int, int, int, int]],
+                Optional[Tuple[int, int, int, int]], Tuple[int, int]]
+
+
+def _segment_records(layers: Sequence[LayerSpec], a: int, b: int,
+                     need: Dict[int, Rect],
+                     in_rect: Rect) -> Tuple[_SegRec, ...]:
+    """Resolve the cell's per-layer slice/pad arithmetic into a static
+    signature (the jit cache key; also the full program spec)."""
+    recs: List[_SegRec] = []
+    origin = (in_rect[0][0], in_rect[1][0])
+    extent = (in_rect[0][1] - in_rect[0][0], in_rect[1][1] - in_rect[1][0])
+    for li in range(a, b + 1):
+        l = layers[li]
+        rows, cols, chans = need[li]
+        if l.conv_t in (ConvT.FC, ConvT.ADD, ConvT.CONCAT):
+            recs.append((int(l.conv_t), l.k, l.s, None, None, chans))
+        else:
+            nr = in_rows(l, rows, 0)
+            nc = in_rows(l, cols, 1)
+            pads = (max(0, -nr[0]), max(0, nr[1] - l.in_h),
+                    max(0, -nc[0]), max(0, nc[1] - l.in_w))
+            sl = (max(0, nr[0]) - origin[0], min(l.in_h, nr[1]) - origin[0],
+                  max(0, nc[0]) - origin[1], min(l.in_w, nc[1]) - origin[1])
+            assert sl[0] >= 0 and sl[2] >= 0 \
+                and sl[1] <= extent[0] and sl[3] <= extent[1], (
+                    "local slice does not cover the needed region", l.name)
+            recs.append((int(l.conv_t), l.k, l.s, pads, sl, chans))
+        origin = (rows[0], cols[0])
+        extent = (rows[1] - rows[0], cols[1] - cols[0])
+    return tuple(recs)
+
+
+def _apply_record(rec: _SegRec, w, x: jnp.ndarray) -> jnp.ndarray:
+    """One layer of a compiled segment program (static-geometry
+    counterpart of :func:`_apply_local`)."""
+    conv_t, k, s, pads, sl, chans = rec
+    conv_t = ConvT(conv_t)
+    if conv_t == ConvT.FC:
+        seg = x.reshape(x.shape[0], x.shape[-1])
+        return (seg @ w[:, chans[0]:chans[1]]).reshape(
+            x.shape[0], 1, chans[1] - chans[0])
+    if conv_t in (ConvT.ADD, ConvT.CONCAT):
+        return x[:, :, chans[0]:chans[1]]
+    pt, pb, pl_, pr = pads
+    r0, r1, c0, c1 = sl
+    xs = x[r0:r1, c0:c1, :]
+    if conv_t in (ConvT.CONV, ConvT.POINTWISE):
+        wsel = w[:, :, :, chans[0]:chans[1]]
+        return _conv_region_p(conv_t, k, s, wsel, xs, ((pt, pb), (pl_, pr)))
+    out = _conv_region_p(conv_t, k, s, w, xs, ((pt, pb), (pl_, pr)))
+    return out[:, :, chans[0]:chans[1]]
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_segment(recs: Tuple[_SegRec, ...]):
+    """Jitted program for one segment-cell signature.  ``jax.jit`` adds its
+    own shape/dtype guard under this entry, so one signature serves every
+    input that shares the geometry."""
+    def run(x, ws):
+        for rec, w in zip(recs, ws):
+            x = _apply_record(rec, w, x)
+        return x
+    return jax.jit(run)
+
+
+def segment_cache_info():
+    """(hits, misses, ...) of the compiled-segment cache — repeated blocks
+    and repeated `run_partitioned` calls should mostly hit."""
+    return _compiled_segment.cache_info()
+
+
+def clear_segment_cache() -> None:
+    _compiled_segment.cache_clear()
+
+
 def _run_branch(layers: Sequence[LayerSpec],
                 weights: Sequence,
                 steps: Sequence[Tuple[Scheme, Mode]],
                 x: jnp.ndarray,
                 owned: Optional[List[List[Rect]]],
                 nodes: int,
-                stats: ExecStats
+                stats: ExecStats,
+                jit_segments: bool = True
                 ) -> Tuple[jnp.ndarray, List[List[Rect]]]:
     """Execute one chain of layers segment by segment.  ``x`` is the full
     input tensor at the branch entry; ``owned`` is the per-node layout it is
@@ -232,13 +330,19 @@ def _run_branch(layers: Sequence[LayerSpec],
                     stats.bytes_received += DTYPE_BYTES * (
                         _rect_elems(in_rect) - held)
                 node_x = full[in_r[0]:in_r[1], in_c[0]:in_c[1], :]
-                origin = (in_r[0], in_c[0])
-                for li in range(a, b + 1):
-                    l = layers[li]
-                    node_x = _apply_local(l, weights[li], node_x, origin,
-                                          need[li])
-                    origin = (need[li][0][0], need[li][1][0])
-                    computed += _rect_elems(need[li]) if li < b else 0
+                for li in range(a, b):
+                    computed += _rect_elems(need[li])
+                if jit_segments:
+                    recs = _segment_records(layers, a, b, need, in_rect)
+                    node_x = _compiled_segment(recs)(
+                        node_x, tuple(weights[a:b + 1]))
+                else:
+                    origin = (in_r[0], in_c[0])
+                    for li in range(a, b + 1):
+                        l = layers[li]
+                        node_x = _apply_local(l, weights[li], node_x,
+                                              origin, need[li])
+                        origin = (need[li][0][0], need[li][1][0])
                 cell_out.append((reg_b, node_x))
         # T boundary: reassemble ("synchronize")
         lb = layers[b]
@@ -290,14 +394,20 @@ def _merge_comm_bytes(l: LayerSpec, prods: Sequence[int],
 
 
 def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
-                    nodes: int) -> Tuple[jnp.ndarray, ExecStats]:
+                    nodes: int,
+                    jit_segments: bool = True
+                    ) -> Tuple[jnp.ndarray, ExecStats]:
+    """Execute ``plan`` on ``nodes`` simulated devices.  ``jit_segments``
+    routes each segment cell through the compiled-program cache (repeated
+    blocks compile once and reuse across calls); ``False`` keeps the
+    historical eager path."""
     stats = ExecStats()
     if graph.is_chain:
         plan.validate()
         if len(plan) != len(graph):
             raise ValueError("plan/graph length mismatch")
         full, _ = _run_branch(graph.layers, weights, plan.steps, x, None,
-                              nodes, stats)
+                              nodes, stats, jit_segments)
         return full, stats
 
     plan.validate_for(graph)
@@ -329,7 +439,8 @@ def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
             ls = [layers[i] for i in rest]
             ws = [weights[i] for i in rest]
             st = [plan.steps[i] for i in rest]
-            cur, owned = _run_branch(ls, ws, st, cur, owned, nodes, stats)
+            cur, owned = _run_branch(ls, ws, st, cur, owned, nodes, stats,
+                                     jit_segments)
         outs[ids[-1]] = cur
         owned_map[ids[-1]] = owned
     return outs[len(graph) - 1], stats

@@ -1,0 +1,284 @@
+"""Heterogeneous cluster subsystem: spec validation, capability-weighted
+shard geometry, scalar/batch parity, homogeneous Testbed bit-parity, and
+Theorem-1 on heterogeneous clusters."""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from repro.cluster import (CLUSTER_PRESETS, ClusterAnalyticEstimator,
+                           ClusterSpec, DeviceSpec, LinkSpec, asym_uplink,
+                           cluster_plan_search, homogeneous, mixed_fast_slow,
+                           stepped, topology_edges)
+from repro.core import (AnalyticEstimator, ConvT, LayerSpec, ModelGraph,
+                        Scheme, Testbed, Topology, chain, plan_search)
+from repro.core.cost import hetero_compute_time_batch_s, hetero_compute_time_s
+from repro.core.dpp import plan_search_reference
+from repro.core.estimator import i_features
+from repro.core.exhaustive import exhaustive_search
+from repro.core.partition import (ALL_SCHEMES, hetero_shard_work, shard_work,
+                                  split_sizes, weighted_split_batch,
+                                  weighted_split_sizes)
+
+EST = AnalyticEstimator()
+
+HETERO_PRESETS = [mixed_fast_slow, stepped, asym_uplink]
+
+
+def _toy_chain(h=20):
+    return chain("toy", [
+        LayerSpec("c0", ConvT.CONV, h, h, 3, 8, 3, 1, 1),
+        LayerSpec("dw", ConvT.DWCONV, h, h, 8, 8, 3, 1, 1),
+        LayerSpec("pw", ConvT.POINTWISE, h, h, 8, 16, 1, 1, 0),
+        LayerSpec("c1", ConvT.CONV, h, h, 16, 16, 3, 2, 1),
+        LayerSpec("c2", ConvT.CONV, h // 2, h // 2, 16, 8, 3, 1, 1),
+    ])
+
+
+def _toy_dag(h=16):
+    return ModelGraph(name="rb", layers=(
+        LayerSpec("c0", ConvT.CONV, h, h, 3, 8, 3, 1, 1),
+        LayerSpec("ba", ConvT.CONV, h, h, 8, 8, 3, 1, 1, inputs=("c0",)),
+        LayerSpec("bb", ConvT.CONV, h, h, 8, 8, 3, 1, 1, inputs=("ba",)),
+        LayerSpec("add", ConvT.ADD, h, h, 8, 8, inputs=("bb", "c0")),
+        LayerSpec("c1", ConvT.CONV, h, h, 8, 8, 3, 1, 1),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Spec validation & adapters
+# ---------------------------------------------------------------------------
+
+def test_topology_edge_sets():
+    assert topology_edges(2, Topology.RING) == ((0, 1),)
+    assert len(topology_edges(6, Topology.RING)) == 6
+    assert topology_edges(4, Topology.PS) == ((0, 1), (0, 2), (0, 3))
+    assert len(topology_edges(5, Topology.MESH)) == 10
+    assert topology_edges(1, Topology.RING) == ()
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        DeviceSpec(gflops=0.0)
+    with pytest.raises(ValueError):
+        LinkSpec(bandwidth_gbps=-1.0)
+    with pytest.raises(ValueError):
+        ClusterSpec(name="bad", devices=(DeviceSpec(),) * 4,
+                    links=(LinkSpec(),) * 3)  # ring of 4 needs 4 links
+
+
+def test_testbed_round_trip():
+    tb = Testbed(nodes=5, bandwidth_gbps=2.0, topology=Topology.PS,
+                 device_gflops=12.0, link_latency_us=7.0)
+    cl = ClusterSpec.from_testbed(tb)
+    assert cl.is_homogeneous
+    assert cl.compat_testbed() == tb
+
+
+def test_preset_shapes():
+    cl = mixed_fast_slow(6)
+    assert cl.n == 6 and not cl.is_homogeneous
+    assert cl.devices[0].gflops > cl.devices[-1].gflops
+    cl = asym_uplink(4)
+    assert cl.bottleneck_bw_gbps == 0.5
+    assert all(d == cl.devices[0] for d in cl.devices)
+    for mk in CLUSTER_PRESETS.values():
+        assert mk(3).n == 3
+
+
+# ---------------------------------------------------------------------------
+# Weighted shard-fraction geometry
+# ---------------------------------------------------------------------------
+
+def test_weighted_split_uniform_matches_balanced():
+    for total in (1, 3, 7, 28, 224, 1000):
+        for parts in (1, 2, 3, 4, 7, 16):
+            assert weighted_split_sizes(total, [1.0] * parts) == \
+                split_sizes(total, parts)
+            assert weighted_split_sizes(total, [16.0] * parts) == \
+                split_sizes(total, parts)
+
+
+def test_weighted_split_proportional_and_edge_cases():
+    assert weighted_split_sizes(100, [3.0, 1.0]) == [75, 25]
+    # one dominant device takes (almost) everything
+    assert weighted_split_sizes(10, [1000.0, 1.0, 1.0]) == [10, 0, 0]
+    # zero weight -> zero-work shard
+    assert weighted_split_sizes(9, [2.0, 0.0, 1.0]) == [6, 0, 3]
+    # conservation under awkward fractions
+    for seed in range(20):
+        rng = random.Random(seed)
+        w = [rng.uniform(0.0, 8.0) for _ in range(rng.randint(2, 9))]
+        if sum(w) == 0.0:
+            continue
+        total = rng.randint(1, 300)
+        s = weighted_split_sizes(total, w)
+        assert sum(s) == total and all(x >= 0 for x in s)
+    with pytest.raises(ValueError):
+        weighted_split_sizes(10, [-1.0, 2.0])
+    with pytest.raises(ValueError):
+        weighted_split_sizes(10, [0.0, 0.0])
+
+
+def test_weighted_split_batch_matches_scalar():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        w = rng.uniform(0.0, 8.0, size=rng.integers(2, 9))
+        if w.sum() == 0.0:
+            continue
+        totals = rng.integers(1, 300, size=40)
+        got = weighted_split_batch(totals, w)
+        for row, t in zip(got, totals):
+            assert list(row) == weighted_split_sizes(int(t), list(w))
+
+
+def test_hetero_shard_work_uniform_bitwise():
+    ls = _toy_chain().layers
+    for l in ls:
+        for scheme in ALL_SCHEMES:
+            for nodes in (2, 3, 4, 7):
+                for halo in (0, 1, 2):
+                    if halo and not scheme.spatial:
+                        continue
+                    ref = shard_work(l, scheme, nodes, extra_halo=halo)
+                    got = hetero_shard_work(l, scheme, [1.0] * nodes,
+                                            extra_halo=halo)
+                    assert got == ref
+
+
+def test_hetero_shard_work_skew():
+    l = _toy_chain().layers[0]
+    w = hetero_shard_work(l, Scheme.INH, [3.0, 1.0])
+    assert w.flops_per_node[0] == 3 * w.flops_per_node[1]
+    # zero-weight device does no T-mode work
+    z = hetero_shard_work(l, Scheme.INH, [1.0, 0.0, 1.0])
+    assert z.flops_per_node[1] == 0.0 and z.out_bytes_per_node[1] == 0.0
+    with pytest.raises(ValueError):
+        hetero_shard_work(l, Scheme.OUTC, [1.0, 2.0], extra_halo=1)
+
+
+# ---------------------------------------------------------------------------
+# Scalar / batch parity of the hetero cost physics
+# ---------------------------------------------------------------------------
+
+def test_hetero_compute_batch_bit_parity():
+    rng = np.random.default_rng(1)
+    cl = stepped(5)
+    tb = cl.compat_testbed()
+    speeds = np.asarray(cl.speeds_gflops)
+    derates = np.asarray(cl.dev_derates)
+    weights = np.asarray(cl.capability_weights)
+    rows, factors, want = [], [], []
+    for l in _toy_chain().layers + _toy_dag().layers:
+        for scheme in ALL_SCHEMES:
+            halo = int(rng.integers(0, 3)) if scheme.spatial else 0
+            rows.append(i_features(l, scheme, tb, halo))
+            factors.append(l.extra_flop_factor)
+            want.append(hetero_compute_time_s(
+                l, scheme, tb, speeds, derates, weights, extra_halo=halo))
+    got = hetero_compute_time_batch_s(np.asarray(rows), tb, speeds, derates,
+                                      weights, np.asarray(factors))
+    assert np.array_equal(got, np.asarray(want))
+
+
+def test_cluster_estimator_batch_protocol():
+    cl = mixed_fast_slow(4)
+    est = ClusterAnalyticEstimator(cl)
+    tb = cl.compat_testbed()
+    l = _toy_chain().layers[0]
+    rows = [i_features(l, s, tb, 0) for s in ALL_SCHEMES]
+    got = est.i_cost_batch(np.asarray(rows), tb)
+    want = [est.i_cost(l, s, tb) for s in ALL_SCHEMES]
+    assert np.array_equal(got, np.asarray(want))
+    with pytest.raises(ValueError):
+        est.i_cost(l, Scheme.INH, Testbed(nodes=7))
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous clusters == historical Testbed, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nodes", [2, 3, 4, 5, 8, 13, 16])
+def test_homogeneous_cluster_bit_parity(nodes):
+    from repro.configs.edge_models import EDGE_MODELS
+    g = EDGE_MODELS["mobilenet"]()
+    tb = Testbed(nodes=nodes, bandwidth_gbps=1.0)
+    cl = homogeneous(nodes, bandwidth_gbps=1.0)
+    ref = plan_search(g, EST, tb)
+    got = cluster_plan_search(g, cl)
+    assert got.plan == ref.plan
+    assert got.cost == ref.cost
+
+
+def test_homogeneous_scalar_costs_bitwise():
+    cl = homogeneous(4, bandwidth_gbps=1.0)
+    est = ClusterAnalyticEstimator(cl)
+    tb = cl.compat_testbed()
+    ls = _toy_chain().layers
+    for l, nxt in zip(ls, list(ls[1:]) + [None]):
+        for s in ALL_SCHEMES:
+            assert est.i_cost(l, s, tb) == EST.i_cost(l, s, tb)
+            for d in ALL_SCHEMES:
+                if nxt is not None:
+                    assert est.s_cost(l, nxt, s, d, tb) == \
+                        EST.s_cost(l, nxt, s, d, tb)
+            assert est.s_cost(l, None, s, None, tb) == \
+                EST.s_cost(l, None, s, None, tb)
+
+
+# ---------------------------------------------------------------------------
+# Theorem-1 on heterogeneous clusters
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mk", HETERO_PRESETS, ids=lambda f: f.__name__)
+@pytest.mark.parametrize("nodes", [2, 3, 4, 6])
+def test_hetero_dp_matches_exhaustive_chain(mk, nodes):
+    g = _toy_chain()
+    cl = mk(nodes)
+    est = ClusterAnalyticEstimator(cl)
+    tb = cl.compat_testbed()
+    res = cluster_plan_search(g, cl)
+    ref = plan_search_reference(g, est, tb)
+    assert res.plan == ref.plan and res.cost == ref.cost
+    _, ex_cost = exhaustive_search(g, est, tb)
+    assert abs(res.cost - ex_cost) < 1e-15
+
+
+@pytest.mark.parametrize("mk", HETERO_PRESETS, ids=lambda f: f.__name__)
+def test_hetero_dp_matches_exhaustive_dag(mk):
+    g = _toy_dag()
+    cl = mk(4)
+    est = ClusterAnalyticEstimator(cl)
+    tb = cl.compat_testbed()
+    res = cluster_plan_search(g, cl)
+    ref = plan_search_reference(g, est, tb)
+    assert res.plan == ref.plan and res.cost == ref.cost
+    _, ex_cost = exhaustive_search(g, est, tb)
+    assert abs(res.cost - ex_cost) / ex_cost < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Capability weighting beats the homogeneous-assumption baseline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["mobilenet", "resnet18", "inception",
+                                   "bert"])
+def test_weighted_beats_even_split_on_mixed(model):
+    from repro.configs.edge_models import EDGE_MODELS
+    g = EDGE_MODELS[model]()
+    cl = mixed_fast_slow(4)
+    rw = cluster_plan_search(g, cl, weighted=True)
+    re = cluster_plan_search(g, cl, weighted=False)
+    assert rw.cost < re.cost
+
+
+def test_memory_check_flags_small_devices():
+    from repro.configs.edge_models import EDGE_MODELS
+    g = EDGE_MODELS["resnet18"]()
+    big = homogeneous(4)
+    assert all(big.memory_ok(g))
+    tiny = dataclasses.replace(
+        big, devices=tuple(dataclasses.replace(d, mem_mb=1.0)
+                           for d in big.devices))
+    assert not any(tiny.memory_ok(g))

@@ -10,8 +10,9 @@ from repro.core.dpp import plan_search
 from repro.core.graph import ConvT, LayerSpec
 from repro.core.partition import ALL_SCHEMES, Mode, Scheme
 from repro.core.plan import Plan, fixed_plan, plan_feasible
-from repro.runtime.engine import (init_weights, run_partitioned,
-                                  run_reference)
+from repro.runtime.engine import (clear_segment_cache, init_weights,
+                                  run_partitioned, run_reference,
+                                  segment_cache_info)
 
 EST = AnalyticEstimator()
 
@@ -96,6 +97,36 @@ def test_comm_accounting_matches_paper_narrative(toy):
     _, s_flex = run_partitioned(g, ws, x, plan, 4)
     assert s_outc.bytes_received > 5 * s_inh.bytes_received
     assert s_flex.bytes_received <= s_inh.bytes_received
+
+
+def test_jit_segment_cache_reuses_repeated_blocks():
+    """Repeated block geometry compiles once: resnet-style repetition plus
+    a second run must be all cache hits, and jit output == eager output."""
+    from repro.configs.edge_models import resnet18
+    g_full = resnet18(width=32)
+    g = chain("rn_prefix", g_full.layers[:2], drop_edges=True)
+    layers = list(g.layers)
+    # two geometrically identical extra blocks under different names
+    for tag in ("x", "y"):
+        layers.append(LayerSpec(f"{tag}a", ConvT.CONV, 8, 8, 64, 64, 3, 1,
+                                1))
+    g = chain("rn_rep", layers)
+    key = jax.random.PRNGKey(2)
+    ws = init_weights(g, key)
+    x = jax.random.normal(key, (32, 32, 3))
+    ref = run_reference(g, ws, x)
+
+    clear_segment_cache()
+    plan = fixed_plan(g, Scheme.INH)
+    out, _ = run_partitioned(g, ws, x, plan, 4)
+    info1 = segment_cache_info()
+    assert info1.hits > 0          # identical blocks / interior cells share
+    out2, _ = run_partitioned(g, ws, x, plan, 4)
+    info2 = segment_cache_info()
+    assert info2.misses == info1.misses   # second run: no new compilations
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+    eager, _ = run_partitioned(g, ws, x, plan, 4, jit_segments=False)
+    assert float(jnp.max(jnp.abs(out2 - eager))) < 1e-6
 
 
 def test_mobilenet_slice_exact():

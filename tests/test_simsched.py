@@ -1,0 +1,165 @@
+"""Discrete-event cluster simulator: stage decomposition, single-request
+agreement with the analytic cost model, and pipelined multi-request
+behavior (throughput, latency distribution, link contention)."""
+import pytest
+
+from repro.cluster import (asym_uplink, build_stages, cluster_plan_search,
+                           homogeneous, mixed_fast_slow, simulate)
+from repro.configs.edge_models import EDGE_MODELS
+from repro.core import (AnalyticEstimator, ConvT, LayerSpec, ModelGraph,
+                        Testbed, chain, fixed_plan, plan_cost, plan_search)
+from repro.core.plan import steps_segments
+
+EST = AnalyticEstimator()
+
+
+def _toy_chain(h=20):
+    return chain("toy", [
+        LayerSpec("c0", ConvT.CONV, h, h, 3, 8, 3, 1, 1),
+        LayerSpec("dw", ConvT.DWCONV, h, h, 8, 8, 3, 1, 1),
+        LayerSpec("c1", ConvT.CONV, h, h, 8, 16, 3, 2, 1),
+        LayerSpec("c2", ConvT.CONV, h // 2, h // 2, 16, 8, 3, 1, 1),
+    ])
+
+
+def _toy_dag(h=16):
+    return ModelGraph(name="rb", layers=(
+        LayerSpec("c0", ConvT.CONV, h, h, 3, 8, 3, 1, 1),
+        LayerSpec("ba", ConvT.CONV, h, h, 8, 8, 3, 1, 1, inputs=("c0",)),
+        LayerSpec("bb", ConvT.CONV, h, h, 8, 8, 3, 1, 1, inputs=("ba",)),
+        LayerSpec("add", ConvT.ADD, h, h, 8, 8, inputs=("bb", "c0")),
+        LayerSpec("c1", ConvT.CONV, h, h, 8, 8, 3, 1, 1),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Stage decomposition
+# ---------------------------------------------------------------------------
+
+def test_chain_stage_structure():
+    g = _toy_chain()
+    cl = homogeneous(4, bandwidth_gbps=1.0)
+    plan = cluster_plan_search(g, cl).plan
+    stages = build_stages(g, plan, cl)
+    segs = steps_segments(plan.steps)
+    # one compute per segment, one sync per internal boundary + gather
+    assert sum(s.kind == "compute" for s in stages) == len(segs)
+    assert sum(s.kind == "sync" for s in stages) == len(segs)
+    assert stages[-1].label == "gather"
+    for s in stages:
+        n = len(s.durations)
+        assert n == (cl.n if s.kind == "compute" else len(cl.links))
+
+
+def test_dag_stage_structure_has_merge():
+    g = _toy_dag()
+    cl = homogeneous(4)
+    plan = cluster_plan_search(g, cl).plan
+    stages = build_stages(g, plan, cl)
+    assert any(s.label.startswith("merge->") for s in stages)
+    assert stages[-1].label == "gather"
+
+
+# ---------------------------------------------------------------------------
+# Single-request agreement with the analytic model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["mobilenet", "bert"])
+@pytest.mark.parametrize("nodes", [2, 3, 4, 5, 8, 13, 16])
+def test_single_request_matches_analytic_on_chains(model, nodes):
+    g = EDGE_MODELS[model]()
+    tb = Testbed(nodes=nodes, bandwidth_gbps=1.0)
+    res = plan_search(g, EST, tb)
+    rep = simulate(g, res.plan, homogeneous(nodes, bandwidth_gbps=1.0),
+                   n_requests=1)
+    assert rep.latencies_s[0] == pytest.approx(res.cost, rel=1e-9)
+    assert rep.throughput_rps == pytest.approx(1.0 / res.cost, rel=1e-9)
+
+
+def test_single_request_fixed_plans_match_analytic():
+    g = _toy_chain()
+    cl = homogeneous(3, bandwidth_gbps=0.5)
+    tb = cl.compat_testbed()
+    for scheme in (0, 1, 2, 3):
+        from repro.core.partition import Scheme
+        plan = fixed_plan(g, Scheme(scheme))
+        want = plan_cost(g, plan, EST, tb)
+        rep = simulate(g, plan, cl, n_requests=1)
+        assert rep.latencies_s[0] == pytest.approx(want, rel=1e-9)
+
+
+def test_dag_single_request_bounded_by_analytic():
+    """Branch transfers overlap unrelated compute in the simulator, so the
+    DAG latency is <= the fully-serialized analytic sum."""
+    g = _toy_dag()
+    cl = homogeneous(4, bandwidth_gbps=1.0)
+    res = cluster_plan_search(g, cl)
+    rep = simulate(g, res.plan, cl, n_requests=1)
+    assert rep.latencies_s[0] <= res.cost * (1 + 1e-12)
+    assert rep.latencies_s[0] > 0.5 * res.cost
+
+
+# ---------------------------------------------------------------------------
+# Pipelined multi-request behavior
+# ---------------------------------------------------------------------------
+
+def test_pipelining_beats_serial_execution():
+    g = EDGE_MODELS["mobilenet"]()
+    cl = homogeneous(4, bandwidth_gbps=0.5)   # comm-heavy: room to overlap
+    res = cluster_plan_search(g, cl)
+    rep = simulate(g, res.plan, cl, n_requests=16)
+    serial_rate = 1.0 / res.cost
+    assert rep.throughput_rps > 1.05 * serial_rate
+    assert rep.p99_latency_s >= rep.p50_latency_s
+    assert len(rep.latencies_s) == 16
+
+
+def test_simulation_is_deterministic():
+    g = _toy_chain()
+    cl = mixed_fast_slow(4)
+    plan = cluster_plan_search(g, cl).plan
+    a = simulate(g, plan, cl, n_requests=8)
+    b = simulate(g, plan, cl, n_requests=8)
+    assert a == b
+
+
+def test_weighted_sharding_helps_on_mixed_cluster():
+    g = EDGE_MODELS["mobilenet"]()
+    cl = mixed_fast_slow(4)
+    plan = cluster_plan_search(g, cl).plan
+    rw = simulate(g, plan, cl, n_requests=1, weighted=True)
+    re = simulate(g, plan, cl, n_requests=1, weighted=False)
+    assert rw.latencies_s[0] < re.latencies_s[0]
+
+
+def test_slow_uplink_throttles_throughput():
+    g = EDGE_MODELS["mobilenet"]()
+    fast = homogeneous(4, bandwidth_gbps=5.0)
+    slow = asym_uplink(4, slow_bw_gbps=0.2, fast_bw_gbps=5.0)
+    plan = cluster_plan_search(g, fast).plan
+    rf = simulate(g, plan, fast, n_requests=8)
+    rs = simulate(g, plan, slow, n_requests=8)
+    assert rs.throughput_rps < rf.throughput_rps
+    assert rs.p50_latency_s > rf.p50_latency_s
+
+
+def test_open_arrivals_keep_latency_flat():
+    """Arrivals slower than the bottleneck stage: no queueing, every
+    request sees (close to) the single-request latency."""
+    g = _toy_chain()
+    cl = homogeneous(4, bandwidth_gbps=1.0)
+    plan = cluster_plan_search(g, cl).plan
+    one = simulate(g, plan, cl, n_requests=1).latencies_s[0]
+    rep = simulate(g, plan, cl, n_requests=8, arrival_period_s=2.0 * one)
+    assert max(rep.latencies_s) == pytest.approx(one, rel=1e-9)
+
+
+def test_device_utilization_reported():
+    g = _toy_chain()
+    cl = homogeneous(4)
+    plan = cluster_plan_search(g, cl).plan
+    rep = simulate(g, plan, cl, n_requests=4)
+    assert len(rep.device_busy_s) == 4
+    assert len(rep.link_busy_s) == len(cl.links)
+    assert all(0.0 <= u <= 1.0 + 1e-12 for u in rep.device_utilization)
+    assert any(b > 0 for b in rep.device_busy_s)
