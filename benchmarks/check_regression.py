@@ -1,0 +1,170 @@
+"""CI perf-regression gate over the BENCH_*.json artifacts.
+
+Compares a freshly produced benchmark record against the committed
+baseline (``benchmarks/baselines/``) and **fails the job** when
+
+* a correctness flag flipped — batched-vs-reference plan mismatch,
+  DP-vs-exhaustive parity gap (either objective), weighted-beats-even or
+  throughput-beats-latency no longer holding — these are hard failures
+  regardless of timing;
+* a tracked search/planner time regressed by more than ``--max-ratio``
+  (default 2x) against the baseline.  Cells faster than ``--min-us`` in
+  the baseline are exempt from the ratio check (micro-timings on shared
+  CI runners are noise); the correctness checks never are.
+
+Usage (what the CI jobs run)::
+
+    python -m benchmarks.check_regression --kind search \
+        --current BENCH_search.json
+    python -m benchmarks.check_regression --kind sweep \
+        --current BENCH_sweep.json
+
+Exit code 0 = clean, 1 = regression (violations listed on stderr).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+_BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+#: parity gaps are float-association noise at worst; anything above this
+#: means the DP diverged from the oracle
+_PARITY_TOL = 1e-9
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_search(current: dict, baseline: dict, max_ratio: float,
+                 min_us: float) -> List[str]:
+    bad: List[str] = []
+    for model, ests in baseline.get("models", {}).items():
+        cur_m = current.get("models", {}).get(model)
+        if cur_m is None:
+            bad.append(f"search/{model}: missing from current record")
+            continue
+        for est, rec in ests.items():
+            cur = cur_m.get(est)
+            if cur is None:
+                bad.append(f"search/{model}/{est}: missing from current")
+                continue
+            if not cur.get("match", False):
+                bad.append(f"search/{model}/{est}: batched plan_search no "
+                           f"longer matches the scalar reference")
+            base_us = float(rec["batched_us"])
+            cur_us = float(cur["batched_us"])
+            if base_us >= min_us and cur_us > max_ratio * base_us:
+                bad.append(
+                    f"search/{model}/{est}: batched search time "
+                    f"{cur_us:.0f}us > {max_ratio:g}x baseline "
+                    f"{base_us:.0f}us")
+    opt = current.get("optimality_5layer", {})
+    if not opt.get("match", False):
+        bad.append("search/optimality_5layer: DP no longer matches the "
+                   "exhaustive optimum")
+    return bad
+
+
+def check_sweep(current: dict, baseline: dict, max_ratio: float,
+                min_us: float) -> List[str]:
+    bad: List[str] = []
+    # correctness sections are keyed off the BASELINE: a current record
+    # that silently drops a parity field must fail, not sail through
+    for pname, prec in baseline.get("presets", {}).items():
+        cur_oracle = current.get("presets", {}).get(pname,
+                                                    {}).get("oracle", {})
+        for nodes, base_orec in prec.get("oracle", {}).items():
+            orec = cur_oracle.get(nodes)
+            if orec is None:
+                bad.append(f"sweep/{pname}/n{nodes}: oracle parity record "
+                           f"missing from current")
+                continue
+            for field, label in (("rel_gap", "latency"),
+                                 ("rel_gap_throughput", "THROUGHPUT")):
+                if field not in base_orec:
+                    continue
+                gap = orec.get(field)
+                if gap is None:
+                    bad.append(f"sweep/{pname}/n{nodes}: {label} oracle "
+                               f"parity field missing from current")
+                elif gap > _PARITY_TOL:
+                    bad.append(f"sweep/{pname}/n{nodes}: {label} oracle "
+                               f"parity gap {gap:.2e}")
+    base_wins = baseline.get("weighted_beats_even_per_model", {})
+    wins = current.get("weighted_beats_even_per_model", {})
+    for model in base_wins:
+        if model not in wins:
+            bad.append(f"sweep/{model}: weighted-beats-even flag missing "
+                       f"from current")
+        elif not wins[model]:
+            bad.append(f"sweep/{model}: capability-weighted plans no "
+                       f"longer beat even splits")
+    tbl = current.get("throughput_beats_latency")
+    if tbl is None:
+        if "throughput_beats_latency" in baseline:
+            bad.append("sweep: throughput_beats_latency record missing "
+                       "from current")
+    elif tbl.get("best_gain", 0.0) < 1.2:
+        bad.append(f"sweep: throughput plans no longer reach 1.2x the "
+                   f"latency plan's simulated throughput "
+                   f"(best {tbl.get('best_gain')})")
+    for pname, prec in baseline.get("presets", {}).items():
+        cur_p = current.get("presets", {}).get(pname, {})
+        for model, rows in prec.get("models", {}).items():
+            cur_rows = cur_p.get("models", {}).get(model)
+            if cur_rows is None:
+                bad.append(f"sweep/{pname}/{model}: missing from current")
+                continue
+            for nodes, rec in rows.items():
+                cur = cur_rows.get(nodes)
+                if cur is None:
+                    continue   # grid shrank; the smoke grids must match
+                base_us = float(rec["planner_us"])
+                cur_us = float(cur["planner_us"])
+                if base_us >= min_us and cur_us > max_ratio * base_us:
+                    bad.append(
+                        f"sweep/{pname}/{model}/n{nodes}: planner time "
+                        f"{cur_us:.0f}us > {max_ratio:g}x baseline "
+                        f"{base_us:.0f}us")
+    return bad
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--kind", choices=("search", "sweep"), required=True)
+    ap.add_argument("--current", required=True,
+                    help="freshly produced BENCH json")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline json (default: benchmarks/baselines/"
+                         "BENCH_<kind>.json)")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="allowed slowdown vs baseline (default 2x)")
+    ap.add_argument("--min-us", type=float, default=5000.0,
+                    help="baseline cells faster than this skip the ratio "
+                         "check (timing noise floor)")
+    args = ap.parse_args(argv)
+    baseline_path = args.baseline or os.path.join(
+        _BASELINE_DIR, f"BENCH_{args.kind}.json")
+    current = _load(args.current)
+    baseline = _load(baseline_path)
+    checker = check_search if args.kind == "search" else check_sweep
+    bad = checker(current, baseline, args.max_ratio, args.min_us)
+    if bad:
+        print(f"REGRESSION: {len(bad)} violation(s) vs {baseline_path}",
+              file=sys.stderr)
+        for line in bad:
+            print(f"  - {line}", file=sys.stderr)
+        return 1
+    print(f"# regression check ({args.kind}) clean vs {baseline_path}",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,8 +4,7 @@ from __future__ import annotations
 import time
 from typing import Callable, Tuple
 
-from repro.core import AnalyticEstimator, Testbed
-from repro.configs.edge_models import EDGE_MODELS
+from repro.core import AnalyticEstimator
 
 EST = AnalyticEstimator()
 

@@ -1,0 +1,90 @@
+"""Serving benchmark: arrival-rate sweep with batch-size choice under a
+p99 bound, latency-objective vs throughput-objective plans.
+
+For each (model, cluster) scenario this drives the pipeline head policy
+(``cluster.serving``): sweep request arrival rates from well below to
+beyond the pipeline's capacity, let ``choose_batch`` pick the goodput-
+maximizing batch size under a p99 latency bound, and record the achieved
+goodput/p99 for both the latency-optimal and the throughput-optimal plan.
+The headline is ``max_goodput_gain`` — how much more load the
+throughput-planned pipeline sustains within the same tail-latency budget.
+
+``--json [PATH]`` writes ``BENCH_serving.json`` (the nightly artifact);
+``--smoke`` shrinks the grids.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.cluster import (CLUSTER_PRESETS, cluster_plan_search,
+                           sweep_serving)
+from repro.configs.edge_models import EDGE_MODELS
+from repro.core import Objective
+
+from .common import emit, json_arg
+
+#: (model, preset, nodes) scenarios — heterogeneous serving clusters
+SCENARIOS = [
+    ("mobilenet", "mixed_fast_slow", 4),
+    ("mobilenet", "asym_uplink", 4),
+    ("inception", "stepped", 8),
+    ("resnet18", "asym_uplink", 8),
+]
+
+
+def run(json_path: str | None = None, smoke: bool = False) -> dict:
+    scenarios = SCENARIOS[:2] if smoke else SCENARIOS
+    batch_sizes = (1, 2, 4) if smoke else (1, 2, 4, 8)
+    n_batches = 16 if smoke else 32
+    #: arrival rates as fractions of the throughput plan's analytic
+    #: capacity; beyond 1.0 the pipeline must shed via batching or fail
+    rate_fracs = [0.5, 0.9, 1.1] if smoke else [0.3, 0.5, 0.7, 0.9,
+                                                1.0, 1.1, 1.3]
+    out: dict = {"batch_sizes": list(batch_sizes),
+                 "rate_fracs": rate_fracs, "scenarios": {}}
+
+    for model, pname, nodes in scenarios:
+        g = EDGE_MODELS[model]()
+        cl = CLUSTER_PRESETS[pname](nodes)
+        lat = cluster_plan_search(g, cl)
+        thr = cluster_plan_search(g, cl, objective=Objective.THROUGHPUT)
+        cap = 1.0 / thr.cost
+        rates = [f * cap for f in rate_fracs]
+        # p99 budget: a few single-request latencies — tight enough that
+        # unbounded batching breaks it, loose enough for pipelining
+        p99_bound = lat.cost * 8.0
+        rec: dict = {"nodes": nodes,
+                     "analytic_capacity_rps": cap,
+                     "p99_bound_ms": p99_bound * 1e3,
+                     "plans": {}}
+        for tag, res in (("latency", lat), ("throughput", thr)):
+            rows = sweep_serving(g, res.plan, cl, rates, p99_bound,
+                                 batch_sizes, n_batches)
+            feasible = [r["goodput_rps"] for r in rows if r["feasible"]]
+            rec["plans"][tag] = {
+                "max_goodput_rps": max(feasible) if feasible else 0.0,
+                "rates": rows,
+            }
+        lat_g = rec["plans"]["latency"]["max_goodput_rps"]
+        thr_g = rec["plans"]["throughput"]["max_goodput_rps"]
+        rec["max_goodput_gain"] = (thr_g / lat_g if lat_g > 0.0
+                                   else float("inf") if thr_g > 0.0
+                                   else 1.0)
+        out["scenarios"][f"{pname}/{model}/n{nodes}"] = rec
+        emit(f"serving/{pname}/{model}", 0.0,
+             f"nodes={nodes};max_goodput_latency={lat_g:.1f};"
+             f"max_goodput_throughput={thr_g:.1f};"
+             f"gain={rec['max_goodput_gain']:.3f}")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote {json_path}", file=sys.stderr)
+    return out
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    run(json_path=json_arg(argv, default="BENCH_serving.json"),
+        smoke="--smoke" in argv)

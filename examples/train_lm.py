@@ -8,7 +8,6 @@ sharding rules the production mesh uses).
 Run:  PYTHONPATH=src python examples/train_lm.py --steps 300
 """
 import argparse
-import dataclasses
 import os
 import sys
 import time

@@ -1,4 +1,5 @@
-"""Heterogeneous cluster subsystem: specs, weighted costing, simulator.
+"""Heterogeneous cluster subsystem: specs, weighted costing, simulator,
+serving objectives.
 
 Quick start::
 
@@ -6,16 +7,28 @@ Quick start::
     cluster = mixed_fast_slow(6)            # 2 fast + 4 slow devices
     res = cluster_plan_search(graph, cluster)
     rep = simulate(graph, res.plan, cluster, n_requests=32)
+
+Serving::
+
+    from repro.core import Objective
+    thr = cluster_plan_search(graph, cluster,
+                              objective=Objective.THROUGHPUT)
+    best, pts = choose_batch(graph, thr.plan, cluster,
+                             arrival_rate_rps=50.0, p99_bound_s=0.2)
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
-from repro.core.dpp import SearchResult, plan_search
+from repro.core.dpp import (Objective, PlanFrontier, SearchResult,
+                            pipeline_frontier, plan_search)
 from repro.core.graph import ModelGraph
 from repro.core.partition import ALL_SCHEMES, Scheme
 
 from .estimator import ClusterAnalyticEstimator
+from .refine import RefineResult, RefineStep, refine_with_simulator
+from .serving import (ServingPoint, choose_batch, max_goodput, serve_point,
+                      sweep_serving)
 from .simsched import SimReport, Stage, build_stages, simulate
 from .spec import (CLUSTER_PRESETS, ClusterSpec, DeviceSpec, LinkSpec,
                    asym_uplink, homogeneous, mixed_fast_slow, stepped,
@@ -26,19 +39,47 @@ def cluster_plan_search(graph: ModelGraph, cluster: ClusterSpec,
                         weighted: bool = True,
                         schemes: Sequence[Scheme] = ALL_SCHEMES,
                         max_segment: int = 32,
-                        allow_fusion: bool = True) -> SearchResult:
+                        allow_fusion: bool = True,
+                        objective: Objective = Objective.LATENCY,
+                        latency_bound_s: Optional[float] = None
+                        ) -> SearchResult:
     """DPP over a cluster: batched tables throughout (the cluster estimator
     implements the full batched protocol, so heterogeneous layouts never
     fall back to scalar calls).  ``weighted=False`` plans with even shard
-    fractions on the same silicon — the homogeneous-assumption baseline."""
+    fractions on the same silicon — the homogeneous-assumption baseline.
+    ``objective`` selects the serving objective (single-shot latency,
+    pipelined throughput, or p99-bounded throughput)."""
     est = ClusterAnalyticEstimator(cluster, weighted=weighted)
     return plan_search(graph, est, cluster.compat_testbed(), schemes=schemes,
-                       max_segment=max_segment, allow_fusion=allow_fusion)
+                       max_segment=max_segment, allow_fusion=allow_fusion,
+                       objective=objective, latency_bound_s=latency_bound_s)
+
+
+def cluster_pipeline_frontier(graph: ModelGraph, cluster: ClusterSpec,
+                              weighted: bool = True,
+                              schemes: Sequence[Scheme] = ALL_SCHEMES,
+                              max_segment: int = 32,
+                              allow_fusion: bool = True,
+                              ub_cost: Optional[float] = None,
+                              prune_ub: bool = True) -> PlanFrontier:
+    """The (compute, sync) Pareto frontier of all plans on this cluster —
+    one build serves every objective selection and the simulator-in-the-
+    loop refinement.  Pass ``prune_ub=False`` when the frontier will be
+    re-weighted (``refine_with_simulator``), ``ub_cost`` to reuse an
+    already-computed latency optimum (see ``core.pipeline_frontier``)."""
+    est = ClusterAnalyticEstimator(cluster, weighted=weighted)
+    return pipeline_frontier(graph, est, cluster.compat_testbed(),
+                             schemes=schemes, max_segment=max_segment,
+                             allow_fusion=allow_fusion, ub_cost=ub_cost,
+                             prune_ub=prune_ub)
 
 
 __all__ = [
     "CLUSTER_PRESETS", "ClusterAnalyticEstimator", "ClusterSpec",
-    "DeviceSpec", "LinkSpec", "SimReport", "Stage", "asym_uplink",
-    "build_stages", "cluster_plan_search", "homogeneous", "mixed_fast_slow",
-    "simulate", "stepped", "topology_edges",
+    "DeviceSpec", "LinkSpec", "Objective", "PlanFrontier", "RefineResult",
+    "RefineStep", "ServingPoint", "SimReport", "Stage", "asym_uplink",
+    "build_stages", "choose_batch", "cluster_pipeline_frontier",
+    "cluster_plan_search", "homogeneous", "max_goodput", "mixed_fast_slow",
+    "refine_with_simulator", "serve_point", "simulate", "stepped",
+    "sweep_serving", "topology_edges",
 ]

@@ -1,0 +1,127 @@
+"""Simulator-in-the-loop plan refinement — close the loop between the
+analytic pipelined-cost DP and the discrete-event schedule.
+
+The analytic frontier scores a plan as ``(compute, sync)`` occupancy sums
+built from per-stage straggler maxes and busiest-link bounds.  On
+heterogeneous clusters and DAGs those are upper bounds: the straggler
+device can differ per layer, parallel-branch transfers overlap on
+different links, and the greedy schedule can hide more (or less) than the
+two-class model assumes.  The simulator measures the truth: per-device
+and per-link busy seconds of the actual pipelined schedule.
+
+The key observation that makes refinement cheap: re-weighting the DP's
+segment costs by a per-class factor (``beta`` on every i-cost, ``alpha``
+on every s-cost) rescales the frontier axes but cannot change the
+*nondominated set* — a pair dominated under one positive scaling is
+dominated under all of them.  So the refinement loop never rebuilds
+tables or re-runs the DP; it re-selects a point on the cached frontier
+(built with ``prune_ub=False`` so the set is complete — the latency-
+optimum cutoff ``plan_search`` uses is only exact for unscaled
+selection):
+
+1. pick the point minimizing ``max(beta*compute, alpha*sync)``
+   (initially ``beta = alpha = 1``);
+2. simulate its plan; measure per-request bottleneck occupancy of each
+   resource class (``max_d device_busy / requests``, same for links);
+3. set ``beta``/``alpha`` to the measured-over-analytic ratios and repeat
+   until the selected point stops moving (a fixed point) or a selection
+   repeats (a cycle — keep the simulator-best iterate).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.dpp import Objective, PlanFrontier, pipeline_frontier
+from repro.core.graph import ModelGraph
+from repro.core.partition import ALL_SCHEMES, Scheme
+from repro.core.plan import Plan
+
+from .estimator import ClusterAnalyticEstimator
+from .simsched import SimReport, simulate
+from .spec import ClusterSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class RefineStep:
+    """One iterate: the frontier point tried and what the simulator saw."""
+
+    point_idx: int
+    compute_s: float          # analytic axis values of the tried point
+    sync_s: float
+    beta: float               # compute-axis weight used for this selection
+    alpha: float              # sync-axis weight
+    sim_throughput_rps: float
+    sim_period_s: float       # 1 / throughput
+    dev_occupancy_s: float    # measured max per-device busy per request
+    link_occupancy_s: float   # measured max per-link busy per request
+
+
+@dataclasses.dataclass(frozen=True)
+class RefineResult:
+    plan: Plan
+    report: SimReport          # simulator report of the returned plan
+    steps: Tuple[RefineStep, ...]
+    converged: bool            # True when a selection fixed point was hit
+
+    @property
+    def throughput_rps(self) -> float:
+        return self.report.throughput_rps
+
+
+def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
+                          n_requests: int = 32, max_iters: int = 5,
+                          weighted: bool = True,
+                          schemes: Sequence[Scheme] = ALL_SCHEMES,
+                          max_segment: int = 32,
+                          allow_fusion: bool = True,
+                          frontier: Optional[PlanFrontier] = None
+                          ) -> RefineResult:
+    """Throughput plan with simulator-calibrated resource weights.
+
+    Returns the simulator-best plan over all iterates (never worse than
+    the unrefined ``Objective.THROUGHPUT`` plan, which is iterate 0).
+    Pass ``frontier`` to reuse an already-built :class:`PlanFrontier`
+    (build it with ``prune_ub=False`` if the scaled re-selection must be
+    exact over the complete nondominated set; a pruned frontier still
+    refines, just within the latency-optimum trust region).
+    """
+    est = ClusterAnalyticEstimator(cluster, weighted=weighted)
+    fr = frontier if frontier is not None else pipeline_frontier(
+        graph, est, cluster.compat_testbed(), schemes, max_segment,
+        allow_fusion, prune_ub=False)
+
+    beta = alpha = 1.0
+    seen: set = set()
+    steps: List[RefineStep] = []
+    best: Optional[Tuple[float, Plan, SimReport]] = None
+    converged = False
+    for _ in range(max_iters):
+        idx = fr.select(Objective.THROUGHPUT, compute_scale=beta,
+                        sync_scale=alpha)
+        if idx in seen:
+            converged = len(steps) > 0 and idx == steps[-1].point_idx
+            break
+        seen.add(idx)
+        a = float(fr.points[idx, 0])
+        b = float(fr.points[idx, 1])
+        plan = fr.plan(idx)
+        rep = simulate(graph, plan, cluster, n_requests=n_requests,
+                       weighted=weighted)
+        period = 1.0 / rep.throughput_rps
+        served = rep.n_requests
+        dev_occ = max(rep.device_busy_s) / served
+        link_occ = (max(rep.link_busy_s) / served
+                    if rep.link_busy_s else 0.0)
+        steps.append(RefineStep(
+            point_idx=idx, compute_s=a, sync_s=b, beta=beta, alpha=alpha,
+            sim_throughput_rps=rep.throughput_rps, sim_period_s=period,
+            dev_occupancy_s=dev_occ, link_occupancy_s=link_occ))
+        if best is None or rep.throughput_rps > best[0]:
+            best = (rep.throughput_rps, plan, rep)
+        # measured-over-analytic occupancy ratios become the axis weights
+        beta = dev_occ / a if a > 0.0 else 1.0
+        alpha = link_occ / b if b > 0.0 else 1.0
+    assert best is not None
+    return RefineResult(plan=best[1], report=best[2],
+                        steps=tuple(steps), converged=converged)

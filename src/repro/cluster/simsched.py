@@ -89,9 +89,16 @@ def _link_durations(cluster: ClusterSpec, bytes_busiest: float,
 
 
 def build_stages(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
-                 weighted: bool = True) -> List[Stage]:
+                 weighted: bool = True, batch_size: int = 1) -> List[Stage]:
     """Decompose ``plan`` into the per-request stage DAG (shared by every
-    request; the scheduler instantiates it once per request)."""
+    request; the scheduler instantiates it once per request).
+
+    ``batch_size`` models request batching at the pipeline head: per-image
+    compute and boundary byte volumes scale linearly with the batch, while
+    per-message link latency does not (the amortization that makes batching
+    win on latency-dominated links — see ``cluster.serving``)."""
+    if batch_size < 1:
+        raise ValueError("batch_size must be >= 1")
     plan.validate_for(graph)
     tb = cluster.compat_testbed()
     speeds = cluster.speeds_gflops
@@ -135,12 +142,13 @@ def build_stages(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
                     ls[m], scheme, tb, speeds, derates, weights,
                     extra_halo=halos[off] if b > a else 0)
             seg_deps = deps if prev is None else [prev]
-            prev = add("compute", dev, seg_deps,
+            prev = add("compute", dev * batch_size, seg_deps,
                        f"seg[{ls[a].name}..{ls[b].name}]")
             if b < len(ids) - 1:
                 bb, msgs = sync_bytes_messages(ls[b], ls[b + 1], scheme,
                                                steps[b + 1][0], n)
-                prev = add("sync", _link_durations(cluster, bb, msgs),
+                prev = add("sync",
+                           _link_durations(cluster, bb * batch_size, msgs),
                            [prev], f"bound@{ls[b].name}")
         assert prev is not None
         tail_stage[ids[-1]] = prev
@@ -148,14 +156,14 @@ def build_stages(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
         p_tail = steps[-1][0]
         consumers = graph.consumer_ids[ids[-1]]
         if not consumers:
-            add("sync", _link_durations(
-                cluster, *sync_bytes_messages(ls[-1], None, p_tail, None,
-                                              n)),
+            bb, msgs = sync_bytes_messages(ls[-1], None, p_tail, None, n)
+            add("sync", _link_durations(cluster, bb * batch_size, msgs),
                 [prev], "gather")
         for c in consumers:
             bb, msgs = sync_bytes_messages(ls[-1], layers[c], p_tail,
                                            plan.steps[c][0], n)
-            durs = np.asarray(_link_durations(cluster, bb, msgs))
+            durs = np.asarray(_link_durations(cluster, bb * batch_size,
+                                              msgs))
             if graph.fan_in(c) >= 2:
                 acc = merge_acc.get(c)
                 if acc is None:
@@ -173,15 +181,20 @@ def build_stages(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
 def simulate(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
              n_requests: int = 1, arrival_period_s: float = 0.0,
              weighted: bool = True,
-             warmup: Optional[int] = None) -> SimReport:
+             warmup: Optional[int] = None,
+             batch_size: int = 1) -> SimReport:
     """Run ``n_requests`` through the plan's stage DAG on the cluster.
 
     ``arrival_period_s=0`` is the closed-loop saturation case (all requests
     queued at t=0); a positive period models an open arrival process.
     ``warmup`` requests (default ``n_requests // 4``) are dropped from the
-    steady-state throughput estimate.
+    steady-state throughput estimate.  ``batch_size > 1`` treats each
+    simulated request as a batch of that many user requests (compute and
+    byte volumes scaled; reported latencies/throughput stay per *batch* —
+    ``cluster.serving`` converts to per-request terms).
     """
-    stages = build_stages(graph, plan, cluster, weighted=weighted)
+    stages = build_stages(graph, plan, cluster, weighted=weighted,
+                          batch_size=batch_size)
     n_stages = len(stages)
     n_dev = cluster.n
     n_link = len(cluster.links)

@@ -10,9 +10,12 @@ from .estimator import (AnalyticEstimator, BatchedCostEstimator,
                         CostEstimator, GBDTEstimator)
 from .cost_tables import (ChainTables, CostTableBuilder, PrefetchedEstimator,
                           build_chain_tables)
-from .plan import (Plan, dag_plan_cost, fixed_plan, plan_cost, plan_feasible,
+from .plan import (Plan, PipelineCost, dag_plan_cost, fixed_plan, plan_cost,
+                   plan_feasible, plan_pipeline_cost, plan_stage_counts,
                    steps_segments)
-from .dpp import SearchResult, plan_search, plan_search_reference
+from .dpp import (Objective, PlanFrontier, SearchResult,
+                  pipeline_frontier, pipeline_objective_key, plan_search,
+                  plan_search_reference)
 from .exhaustive import enumerate_dag_plans, exhaustive_search
 from . import baselines
 
@@ -24,8 +27,10 @@ __all__ = [
     "weighted_split_sizes",
     "AnalyticEstimator", "BatchedCostEstimator", "CostEstimator",
     "GBDTEstimator", "ChainTables", "CostTableBuilder",
-    "PrefetchedEstimator", "build_chain_tables", "Plan", "dag_plan_cost",
-    "fixed_plan", "plan_cost", "plan_feasible", "steps_segments",
-    "SearchResult", "plan_search", "plan_search_reference",
+    "PrefetchedEstimator", "build_chain_tables", "Plan", "PipelineCost",
+    "dag_plan_cost", "fixed_plan", "plan_cost", "plan_feasible",
+    "plan_pipeline_cost", "plan_stage_counts", "steps_segments",
+    "Objective", "PlanFrontier", "SearchResult", "pipeline_frontier",
+    "pipeline_objective_key", "plan_search", "plan_search_reference",
     "enumerate_dag_plans", "exhaustive_search", "baselines",
 ]

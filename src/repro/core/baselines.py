@@ -9,7 +9,7 @@
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Dict, Tuple
 
 from .cost import Testbed
 from .cost_tables import PrefetchedEstimator

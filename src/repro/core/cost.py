@@ -16,7 +16,7 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 from .graph import ConvT, LayerSpec
-from .partition import (Mode, Scheme, boundary_bytes_same_scheme,
+from .partition import (Scheme, boundary_bytes_same_scheme,
                         boundary_bytes_same_scheme_batch,
                         conv_flops_per_elem_batch, hetero_flops_batch,
                         hetero_shard_work, relayout_bytes,

@@ -17,7 +17,7 @@ next_K, next_fan_in`` for s-.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Protocol, Sequence
+from typing import List, Optional, Protocol
 
 import numpy as np
 

@@ -13,10 +13,11 @@ from typing import Iterator, List, Optional, Sequence, Tuple
 
 from .cost import Testbed
 from .cost_tables import PrefetchedEstimator
+from .dpp import Objective, pipeline_objective_key
 from .estimator import CostEstimator
 from .graph import ModelGraph
 from .partition import ALL_SCHEMES, Mode, Scheme
-from .plan import Plan, plan_cost, plan_feasible
+from .plan import Plan, plan_cost, plan_feasible, plan_pipeline_cost
 
 
 def enumerate_plans(n: int, schemes: Sequence[Scheme] = ALL_SCHEMES,
@@ -71,16 +72,38 @@ def enumerate_dag_plans(graph: ModelGraph,
 
 def exhaustive_search(graph: ModelGraph, est: CostEstimator, tb: Testbed,
                       schemes: Sequence[Scheme] = ALL_SCHEMES,
-                      allow_fusion: bool = True) -> Tuple[Plan, float]:
+                      allow_fusion: bool = True,
+                      objective: Objective = Objective.LATENCY,
+                      latency_bound_s: Optional[float] = None
+                      ) -> Tuple[Plan, float]:
+    """Oracle optimum under ``objective``.  Returns ``(plan, cost)`` where
+    ``cost`` is the latency for ``LATENCY`` and the pipeline bottleneck
+    time for the throughput objectives (scored with
+    ``plan.plan_pipeline_cost`` and ordered by the same
+    ``pipeline_objective_key`` the DP frontier selection uses)."""
     # one batched prefetch answers every estimator query the enumeration
     # can make (the plan space revisits the same segments endlessly, so
     # scoring degenerates to dict lookups)
     pf = PrefetchedEstimator.for_graph(graph, est, tb, schemes, allow_fusion)
     best: Optional[Plan] = None
-    best_cost = float("inf")
     gen = (enumerate_plans(len(graph), schemes, allow_fusion)
            if graph.is_chain
            else enumerate_dag_plans(graph, schemes, allow_fusion))
+    if objective != Objective.LATENCY:
+        best_key: Optional[tuple] = None
+        best_bottleneck = float("inf")
+        for plan in gen:
+            if not plan_feasible(graph, plan, tb.nodes):
+                continue
+            pc = plan_pipeline_cost(graph, plan, pf, tb)
+            key = pipeline_objective_key(pc.compute_s, pc.sync_s, objective,
+                                         latency_bound_s)
+            if best_key is None or key < best_key:
+                best, best_key = plan, key
+                best_bottleneck = pc.bottleneck_s
+        assert best is not None
+        return best, best_bottleneck
+    best_cost = float("inf")
     for plan in gen:
         if not plan_feasible(graph, plan, tb.nodes):
             continue

@@ -17,8 +17,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import functools
-import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 #: Sentinel producer name meaning "the graph input tensor".
 GRAPH_INPUT = "@input"

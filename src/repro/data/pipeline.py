@@ -10,7 +10,7 @@ Markov bigram structure, so the training loss has real signal to descend.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 import jax.numpy as jnp

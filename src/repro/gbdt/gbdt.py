@@ -9,7 +9,6 @@ accumulation order exactly, so the two are bit-identical).
 """
 from __future__ import annotations
 
-import io
 from typing import List, Optional, Tuple
 
 import numpy as np

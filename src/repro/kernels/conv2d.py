@@ -15,7 +15,6 @@ back to the jnp reference in ops.py.  Validated with interpret=True.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

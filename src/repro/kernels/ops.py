@@ -17,7 +17,6 @@ import jax.numpy as jnp
 
 from .conv2d import conv2d_tiled
 from .flash_attention import flash_attention_bh
-from .ref import conv2d_ref
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",

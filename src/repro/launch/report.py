@@ -10,7 +10,7 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import List
 
 
 def load(dirpath: str) -> List[dict]:

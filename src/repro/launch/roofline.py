@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 

@@ -7,7 +7,6 @@ form is the correctness oracle.
 """
 from __future__ import annotations
 
-import math
 from typing import Tuple
 
 import jax

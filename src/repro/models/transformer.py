@@ -13,7 +13,6 @@ interleave, Whisper enc/dec) are composed from scanned homogeneous chunks.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 

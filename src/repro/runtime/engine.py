@@ -188,6 +188,11 @@ class ExecStats:
     sync_points: int = 0
     bytes_received: float = 0.0      # across all nodes/boundaries (fp32)
     redundant_elems: float = 0.0     # halo outputs computed more than once
+    #: executed T-terminated segments — the plan's compute-stage count,
+    #: matching ``plan.plan_stage_counts`` and the simulator's stage DAG
+    #: (pipeline metadata: serving reads it to align engine runs with
+    #: ``cluster.simsched`` schedules)
+    compute_stages: int = 0
 
 
 def _rect_elems(r: Rect) -> int:
@@ -352,6 +357,7 @@ def _run_branch(layers: Sequence[LayerSpec],
                                  ch[0]:ch[1]].set(shard)
         stats.sync_points += 1
         stats.redundant_elems += float(computed)
+        stats.compute_stages += 1
         owned = regs_b
         full = rebuilt
     assert owned is not None, "branch must contain at least one segment"
@@ -424,6 +430,9 @@ def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
             merged = merge_tensors(l_m, [outs[p] for p in prods])
             regs = exact_regions(l_m, q, nodes)
             stats.sync_points += 1
+            # the merge layer's T-singleton segment executes inside
+            # merge_tensors — still one compute stage of the pipeline
+            stats.compute_stages += 1
             stats.bytes_received += _merge_comm_bytes(
                 l_m, prods,
                 [layers[p].out_c if p >= 0 else layers[0].in_c

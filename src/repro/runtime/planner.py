@@ -20,9 +20,9 @@ import dataclasses
 from typing import Optional
 
 from repro.core.cost import Testbed
-from repro.core.dpp import plan_search
+from repro.core.dpp import Objective, plan_search
 from repro.core.graph import ConvT, LayerSpec, ModelGraph
-from repro.core.partition import Mode, Scheme
+from repro.core.partition import Scheme
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 from repro.runtime.shard_plan import Strategy
 
@@ -149,8 +149,18 @@ def _chainify(layers):
 
 
 def choose_strategy(cfg, mesh, mode: str,
-                    use_planner: bool = True) -> Strategy:
-    """Run the FCO planner over the proxy graph and map schemes back."""
+                    use_planner: bool = True,
+                    objective: Objective = Objective.LATENCY,
+                    latency_bound_s: Optional[float] = None) -> Strategy:
+    """Run the FCO planner over the proxy graph and map schemes back.
+
+    ``objective`` threads the serving objective through to the DP:
+    ``Objective.THROUGHPUT`` picks the block strategy that maximizes
+    steady-state pipelined step rate (decode serving, where batches
+    stream through the mesh and ICI collectives overlap the next batch's
+    compute), ``P99_BOUNDED`` constrains it to a per-step latency bound.
+    The TPU roofline estimator is scalar-only, so these run the
+    scalar-provider frontier path of ``plan_search``."""
     m = mesh.shape["model"]
     dpn = 1
     for a in mesh.axis_names:
@@ -168,7 +178,8 @@ def choose_strategy(cfg, mesh, mode: str,
     graph, div, kv_dim = _proxy_graph(cfg, max(1, tokens), m)
     est = TpuRooflineEstimator(m, div, kv_dim)
     tb = Testbed(nodes=m, bandwidth_gbps=ICI_BW * 8 / 1e9)
-    res = plan_search(graph, est, tb, schemes=_SCHEMES, allow_fusion=True)
+    res = plan_search(graph, est, tb, schemes=_SCHEMES, allow_fusion=True,
+                      objective=objective, latency_bound_s=latency_bound_s)
 
     by_name = {}
     for layer, (scheme, _mode) in zip(graph.layers, res.plan.steps):

@@ -20,11 +20,9 @@ depends on the layer/testbed pair.
 from __future__ import annotations
 
 import dataclasses
-import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

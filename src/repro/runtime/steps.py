@@ -1,8 +1,6 @@
 """Step functions lowered by the launcher/dry-run: train / prefill / decode."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ from repro.core.cost import (Testbed, Topology, compute_time_batch_s,
                              sync_time_batch_s)
 from repro.core.estimator import (GBDTEstimator, i_features, s_features)
 from repro.core.graph import ConvT, LayerSpec
-from repro.core.partition import ALL_SCHEMES, Scheme
+from repro.core.partition import Scheme
 from repro.gbdt import GBDTRegressor
 
 

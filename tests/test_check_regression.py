@@ -1,0 +1,134 @@
+"""The CI perf-regression gate: doctored baselines and flipped parity
+flags must fail, the committed baseline must pass against itself."""
+import copy
+import json
+import os
+
+from benchmarks.check_regression import check_search, check_sweep, main
+
+_BASE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                     "baselines")
+
+SEARCH = {
+    "models": {
+        "mobilenet": {
+            "analytic": {"batched_us": 9000.0, "match": True},
+            "gbdt": {"batched_us": 15000.0, "match": True},
+        },
+    },
+    "optimality_5layer": {"match": True},
+}
+
+SWEEP = {
+    "presets": {
+        "uniform": {
+            "oracle": {"4": {"rel_gap": 1e-15,
+                             "rel_gap_throughput": 1e-15}},
+            "models": {"mobilenet": {"4": {"planner_us": 12000.0}}},
+        },
+    },
+    "weighted_beats_even_per_model": {"mobilenet": True},
+    "throughput_beats_latency": {"best_gain": 1.31, "where": "x"},
+}
+
+
+def test_clean_record_passes():
+    assert check_search(SEARCH, SEARCH, 2.0, 5000.0) == []
+    assert check_sweep(SWEEP, SWEEP, 2.0, 5000.0) == []
+
+
+def test_search_time_regression_fails():
+    doctored = copy.deepcopy(SEARCH)
+    doctored["models"]["mobilenet"]["analytic"]["batched_us"] = 4000.0
+    bad = check_search(SEARCH, doctored, 2.0, 1000.0)
+    assert len(bad) == 1 and "2x baseline" in bad[0]
+
+
+def test_noise_floor_exempts_micro_timings():
+    doctored = copy.deepcopy(SEARCH)
+    doctored["models"]["mobilenet"]["analytic"]["batched_us"] = 4000.0
+    assert check_search(SEARCH, doctored, 2.0, 5000.0) == []
+
+
+def test_flipped_match_flag_fails_regardless_of_timing():
+    cur = copy.deepcopy(SEARCH)
+    cur["models"]["mobilenet"]["gbdt"]["match"] = False
+    bad = check_search(cur, SEARCH, 2.0, 5000.0)
+    assert any("no longer matches" in b for b in bad)
+    cur2 = copy.deepcopy(SEARCH)
+    cur2["optimality_5layer"]["match"] = False
+    assert any("exhaustive" in b
+               for b in check_search(cur2, SEARCH, 2.0, 5000.0))
+
+
+def test_missing_model_fails():
+    cur = copy.deepcopy(SEARCH)
+    del cur["models"]["mobilenet"]
+    assert any("missing" in b for b in check_search(cur, SEARCH, 2.0,
+                                                    5000.0))
+
+
+def test_sweep_parity_and_gain_flips_fail():
+    cur = copy.deepcopy(SWEEP)
+    cur["presets"]["uniform"]["oracle"]["4"]["rel_gap_throughput"] = 1e-3
+    assert any("THROUGHPUT oracle" in b
+               for b in check_sweep(cur, SWEEP, 2.0, 5000.0))
+    cur2 = copy.deepcopy(SWEEP)
+    cur2["weighted_beats_even_per_model"]["mobilenet"] = False
+    assert any("even splits" in b
+               for b in check_sweep(cur2, SWEEP, 2.0, 5000.0))
+    cur3 = copy.deepcopy(SWEEP)
+    cur3["throughput_beats_latency"]["best_gain"] = 1.1
+    assert any("1.2x" in b for b in check_sweep(cur3, SWEEP, 2.0, 5000.0))
+
+
+def test_sweep_missing_correctness_sections_fail():
+    """Dropping a parity/win field from the current record must trip the
+    gate — correctness checks are keyed off the baseline's sections."""
+    cur = copy.deepcopy(SWEEP)
+    del cur["presets"]["uniform"]["oracle"]["4"]["rel_gap_throughput"]
+    assert any("parity field missing" in b
+               for b in check_sweep(cur, SWEEP, 2.0, 5000.0))
+    cur2 = copy.deepcopy(SWEEP)
+    del cur2["presets"]["uniform"]["oracle"]["4"]
+    assert any("parity record missing" in b
+               for b in check_sweep(cur2, SWEEP, 2.0, 5000.0))
+    cur3 = copy.deepcopy(SWEEP)
+    del cur3["weighted_beats_even_per_model"]["mobilenet"]
+    assert any("flag missing" in b
+               for b in check_sweep(cur3, SWEEP, 2.0, 5000.0))
+    cur4 = copy.deepcopy(SWEEP)
+    del cur4["throughput_beats_latency"]
+    assert any("record missing" in b
+               for b in check_sweep(cur4, SWEEP, 2.0, 5000.0))
+
+
+def test_sweep_planner_time_regression_fails():
+    doctored = copy.deepcopy(SWEEP)
+    doctored["presets"]["uniform"]["models"]["mobilenet"]["4"][
+        "planner_us"] = 5000.0
+    bad = check_sweep(SWEEP, doctored, 2.0, 1000.0)
+    assert len(bad) == 1 and "planner time" in bad[0]
+
+
+def test_cli_end_to_end(tmp_path):
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(SEARCH))
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(SEARCH))
+    assert main(["--kind", "search", "--current", str(cur),
+                 "--baseline", str(base)]) == 0
+    doctored = copy.deepcopy(SEARCH)
+    doctored["models"]["mobilenet"]["analytic"]["batched_us"] = 1000.0
+    base.write_text(json.dumps(doctored))
+    assert main(["--kind", "search", "--current", str(cur),
+                 "--baseline", str(base), "--min-us", "500"]) == 1
+
+
+def test_committed_baselines_pass_against_themselves():
+    for kind in ("search", "sweep"):
+        path = os.path.join(_BASE, f"BENCH_{kind}.json")
+        with open(path) as f:
+            rec = json.load(f)
+        checker = check_search if kind == "search" else check_sweep
+        assert checker(rec, rec, 2.0, 5000.0) == []

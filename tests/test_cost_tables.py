@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core import (ALL_SCHEMES, AnalyticEstimator, PrefetchedEstimator,
-                        Scheme, Testbed, Topology, build_chain_tables, chain,
+                        Scheme, Testbed, build_chain_tables, chain,
                         plan_cost, plan_feasible)
 from repro.core.estimator import i_features, s_features
 from repro.core.exhaustive import enumerate_plans

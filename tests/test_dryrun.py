@@ -5,7 +5,6 @@ the full record pipeline: lowering, memory analysis, loop-aware roofline
 terms, planner strategy.  The exhaustive 40x2 sweep lives in
 ``experiments/dryrun/`` (python -m repro.launch.dryrun --all).
 """
-import json
 import os
 import subprocess
 import sys

@@ -1,6 +1,5 @@
 """From-scratch GBDT: regression quality, persistence, estimator loop."""
 import numpy as np
-import pytest
 
 from repro.gbdt import GBDTRegressor
 

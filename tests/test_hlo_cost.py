@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.hlo_cost import HloCostAnalyzer, analyze_hlo
+from repro.launch.hlo_cost import analyze_hlo
 
 
 def _compile(fn, *args):

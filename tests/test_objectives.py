@@ -1,0 +1,263 @@
+"""Serving objectives: Theorem-1 parity for the pipelined-cost DP, the
+frontier's structural invariants, and the analytic-vs-simulated
+bottleneck-time tolerance contract."""
+import numpy as np
+import pytest
+
+from repro.cluster import (CLUSTER_PRESETS, ClusterAnalyticEstimator,
+                           cluster_plan_search, homogeneous, simulate)
+from repro.configs.edge_models import EDGE_MODELS
+from repro.core import (AnalyticEstimator, Objective, Testbed,
+                        exhaustive_search, pipeline_frontier,
+                        pipeline_objective_key, plan_pipeline_cost,
+                        plan_search)
+from repro.core.graph import ConvT, LayerSpec, ModelGraph, chain
+
+EST = AnalyticEstimator()
+
+
+def oracle_chain():
+    return chain("oracle5", [
+        LayerSpec("c0", ConvT.CONV, 24, 24, 3, 8, 3, 1, 1),
+        LayerSpec("dw", ConvT.DWCONV, 24, 24, 8, 8, 3, 1, 1),
+        LayerSpec("pw", ConvT.POINTWISE, 24, 24, 8, 16, 1, 1, 0),
+        LayerSpec("c1", ConvT.CONV, 24, 24, 16, 16, 3, 2, 1),
+        LayerSpec("c2", ConvT.CONV, 12, 12, 16, 8, 3, 1, 1),
+    ])
+
+
+def res_block_dag():
+    return ModelGraph(name="resblock", layers=(
+        LayerSpec("c0", ConvT.CONV, 16, 16, 3, 8, 3, 1, 1),
+        LayerSpec("a", ConvT.CONV, 16, 16, 8, 8, 3, 1, 1, inputs=("c0",)),
+        LayerSpec("b", ConvT.CONV, 16, 16, 8, 8, 3, 1, 1, inputs=("a",)),
+        LayerSpec("add", ConvT.ADD, 16, 16, 8, 8, inputs=("b", "c0")),
+        LayerSpec("c1", ConvT.CONV, 16, 16, 8, 8, 3, 1, 1,
+                  inputs=("add",)),
+    ))
+
+
+def inception_dag():
+    return ModelGraph(name="tinyinc", layers=(
+        LayerSpec("stem", ConvT.CONV, 16, 16, 3, 8, 3, 1, 1),
+        LayerSpec("b1", ConvT.POINTWISE, 16, 16, 8, 4, 1, 1, 0,
+                  inputs=("stem",)),
+        LayerSpec("b2a", ConvT.POINTWISE, 16, 16, 8, 4, 1, 1, 0,
+                  inputs=("stem",)),
+        LayerSpec("b2b", ConvT.CONV, 16, 16, 4, 4, 3, 1, 1,
+                  inputs=("b2a",)),
+        LayerSpec("cat", ConvT.CONCAT, 16, 16, 8, 8,
+                  inputs=("b1", "b2b")),
+        LayerSpec("c1", ConvT.CONV, 16, 16, 8, 8, 3, 1, 1,
+                  inputs=("cat",)),
+    ))
+
+
+GRAPHS = {"chain": oracle_chain, "resblock": res_block_dag,
+          "inception": inception_dag}
+
+
+# ---------------------------------------------------------------------------
+# Theorem-1 parity under Objective.THROUGHPUT across every cluster preset.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", list(CLUSTER_PRESETS))
+@pytest.mark.parametrize("gname", list(GRAPHS))
+def test_throughput_dp_matches_exhaustive(preset, gname):
+    g = GRAPHS[gname]()
+    for nodes in (2, 4):
+        cl = CLUSTER_PRESETS[preset](nodes)
+        est = ClusterAnalyticEstimator(cl)
+        tb = cl.compat_testbed()
+        res = cluster_plan_search(g, cl, objective=Objective.THROUGHPUT)
+        _, ex_cost = exhaustive_search(g, est, tb,
+                                       objective=Objective.THROUGHPUT)
+        assert abs(res.cost - ex_cost) / ex_cost < 1e-9
+        # the returned plan must realize the claimed (compute, sync) pair
+        pc = plan_pipeline_cost(g, res.plan, est, tb)
+        assert abs(pc.bottleneck_s - res.cost) / res.cost < 1e-9
+        assert res.pipeline is not None
+        assert abs(pc.compute_s - res.pipeline.compute_s) \
+            <= 1e-9 * pc.compute_s
+        assert abs(pc.sync_s - res.pipeline.sync_s) \
+            <= 1e-9 * max(pc.sync_s, 1e-30)
+
+
+@pytest.mark.parametrize("gname", ["chain", "resblock"])
+@pytest.mark.parametrize("mult", [1.5, 1.02, 0.5])
+def test_p99_bounded_dp_matches_exhaustive(gname, mult):
+    g = GRAPHS[gname]()
+    for preset in ("uniform", "asym_uplink"):
+        cl = CLUSTER_PRESETS[preset](4)
+        est = ClusterAnalyticEstimator(cl)
+        tb = cl.compat_testbed()
+        bound = cluster_plan_search(g, cl).cost * mult
+        res = cluster_plan_search(g, cl, objective=Objective.P99_BOUNDED,
+                                  latency_bound_s=bound)
+        _, ex_cost = exhaustive_search(g, est, tb,
+                                       objective=Objective.P99_BOUNDED,
+                                       latency_bound_s=bound)
+        assert abs(res.cost - ex_cost) / max(ex_cost, 1e-30) < 1e-9
+
+
+def test_p99_infeasible_bound_degrades_to_latency_optimum():
+    g = oracle_chain()
+    tb = Testbed(nodes=4, bandwidth_gbps=1.0)
+    lat = plan_search(g, EST, tb)
+    res = plan_search(g, EST, tb, objective=Objective.P99_BOUNDED,
+                      latency_bound_s=lat.cost * 0.5)   # unreachable
+    assert res.pipeline is not None
+    assert abs(res.pipeline.latency_s - lat.cost) / lat.cost < 1e-9
+
+
+def test_p99_requires_bound():
+    g = oracle_chain()
+    tb = Testbed(nodes=2)
+    with pytest.raises(ValueError):
+        plan_search(g, EST, tb, objective=Objective.P99_BOUNDED)
+    with pytest.raises(ValueError):
+        pipeline_objective_key(1.0, 1.0, Objective.P99_BOUNDED)
+
+
+# ---------------------------------------------------------------------------
+# Frontier invariants.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+def test_frontier_is_nondominated_and_contains_latency_optimum(gname):
+    g = GRAPHS[gname]()
+    tb = Testbed(nodes=4, bandwidth_gbps=1.0)
+    fr = pipeline_frontier(g, EST, tb)
+    pts = fr.points
+    assert len(pts) >= 1
+    # sorted by compute ascending, sync strictly descending (nondominated)
+    assert np.all(np.diff(pts[:, 0]) > 0) or len(pts) == 1
+    assert np.all(np.diff(pts[:, 1]) < 0) or len(pts) == 1
+    # the latency optimum is a frontier point (sum is monotone in the pair)
+    lat = plan_search(g, EST, tb)
+    sums = pts.sum(axis=1)
+    assert abs(sums.min() - lat.cost) / lat.cost < 1e-9
+    # every point's plan realizes its coordinates
+    for i in range(len(pts)):
+        pc = plan_pipeline_cost(g, fr.plan(i), EST, tb)
+        assert abs(pc.compute_s - pts[i, 0]) <= 1e-9 * pts[i, 0]
+        assert abs(pc.sync_s - pts[i, 1]) <= 1e-9 * max(pts[i, 1], 1e-30)
+
+
+def test_scalar_estimator_frontier_matches_batched():
+    class ScalarOnly:
+        def i_cost(self, *a, **k):
+            return EST.i_cost(*a, **k)
+
+        def s_cost(self, *a, **k):
+            return EST.s_cost(*a, **k)
+
+    tb = Testbed(nodes=4, bandwidth_gbps=1.0)
+    for gname in ("chain", "resblock"):
+        g = GRAPHS[gname]()
+        fb = pipeline_frontier(g, EST, tb)
+        fs = pipeline_frontier(g, ScalarOnly(), tb)
+        assert fb.points.shape == fs.points.shape
+        assert np.allclose(fb.points, fs.points, rtol=1e-12, atol=0)
+
+
+def test_throughput_never_worse_than_latency_plan_bottleneck():
+    for gname in GRAPHS:
+        g = GRAPHS[gname]()
+        for preset in ("uniform", "asym_uplink"):
+            cl = CLUSTER_PRESETS[preset](4)
+            est = ClusterAnalyticEstimator(cl)
+            tb = cl.compat_testbed()
+            lat = cluster_plan_search(g, cl)
+            thr = cluster_plan_search(g, cl,
+                                      objective=Objective.THROUGHPUT)
+            lat_pc = plan_pipeline_cost(g, lat.plan, est, tb)
+            assert thr.cost <= lat_pc.bottleneck_s * (1 + 1e-12)
+
+
+def test_frontier_ub_variants_agree_on_unscaled_optimum():
+    """prune_ub=False keeps a superset of points; ub_cost reproduces the
+    internally-seeded cutoff; all three agree on the unscaled optimum."""
+    g = oracle_chain()
+    for bw in (5.0, 0.3):
+        tb = Testbed(nodes=4, bandwidth_gbps=bw)
+        lat = plan_search(g, EST, tb)
+        fp = pipeline_frontier(g, EST, tb)
+        fu = pipeline_frontier(g, EST, tb, prune_ub=False)
+        fc = pipeline_frontier(g, EST, tb, ub_cost=lat.cost)
+        assert np.allclose(fp.points, fc.points, rtol=0, atol=0)
+        assert len(fu.points) >= len(fp.points)
+        ref = fp.search_result(Objective.THROUGHPUT).cost
+        for fr in (fu, fc):
+            assert fr.search_result(Objective.THROUGHPUT).cost \
+                == pytest.approx(ref, rel=1e-12)
+
+
+def test_frontier_select_scaling_picks_extremes():
+    g = oracle_chain()
+    tb = Testbed(nodes=4, bandwidth_gbps=0.3)   # comm-heavy: rich frontier
+    fr = pipeline_frontier(g, EST, tb)
+    if len(fr.points) < 2:
+        pytest.skip("degenerate frontier")
+    # huge sync weight -> pick the sync-minimal (last) point; huge compute
+    # weight -> the compute-minimal (first) point
+    assert fr.select(Objective.THROUGHPUT, sync_scale=1e9) \
+        == len(fr.points) - 1
+    assert fr.select(Objective.THROUGHPUT, compute_scale=1e9) == 0
+
+
+# ---------------------------------------------------------------------------
+# Analytic bottleneck vs simulated steady-state inter-departure time.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["mobilenet", "bert"])
+@pytest.mark.parametrize("nodes", [2, 4])
+def test_analytic_bottleneck_matches_sim_on_homogeneous_chains(model,
+                                                               nodes):
+    g = EDGE_MODELS[model]()
+    cl = homogeneous(nodes, bandwidth_gbps=2.0)
+    est = ClusterAnalyticEstimator(cl)
+    tb = cl.compat_testbed()
+    for objective in (Objective.LATENCY, Objective.THROUGHPUT):
+        res = plan_search(g, est, tb, objective=objective)
+        pc = plan_pipeline_cost(g, res.plan, est, tb)
+        rep = simulate(g, res.plan, cl, n_requests=64)
+        period = 1.0 / rep.throughput_rps
+        assert abs(period - pc.bottleneck_s) / pc.bottleneck_s < 0.05
+
+
+def test_objective_threads_through_tpu_planner_proxy():
+    """choose_strategy's scalar roofline estimator runs the frontier path
+    (chain, scalar providers) — THROUGHPUT must match its own oracle."""
+    from repro.runtime.planner import TpuRooflineEstimator, _proxy_graph
+    from repro.configs.registry import get_config
+
+    cfg = get_config("olmo-1b")
+    graph, div, kv = _proxy_graph(cfg, 4096, 4)
+    est = TpuRooflineEstimator(4, div, kv)
+    from repro.core.partition import Scheme
+    from repro.launch.mesh import ICI_BW
+    tb = Testbed(nodes=4, bandwidth_gbps=ICI_BW * 8 / 1e9)
+    schemes = (Scheme.INH, Scheme.OUTC)
+    res = plan_search(graph, est, tb, schemes=schemes,
+                      objective=Objective.THROUGHPUT)
+    _, ex = exhaustive_search(graph, est, tb, schemes=schemes,
+                              objective=Objective.THROUGHPUT)
+    assert abs(res.cost - ex) / ex < 1e-9
+
+
+@pytest.mark.parametrize("preset", ["mixed_fast_slow", "stepped"])
+def test_hetero_analytic_bottleneck_upper_bounds_sim(preset):
+    """On heterogeneous clusters the analytic occupancy sums are upper
+    bounds (straggler may move between layers; the schedule can only do
+    better) — but stay within a loose band of the simulator."""
+    g = EDGE_MODELS["mobilenet"]()
+    cl = CLUSTER_PRESETS[preset](4)
+    est = ClusterAnalyticEstimator(cl)
+    tb = cl.compat_testbed()
+    res = plan_search(g, est, tb, objective=Objective.THROUGHPUT)
+    pc = plan_pipeline_cost(g, res.plan, est, tb)
+    rep = simulate(g, res.plan, cl, n_requests=64)
+    period = 1.0 / rep.throughput_rps
+    assert period <= pc.bottleneck_s * 1.05
+    assert period >= pc.bottleneck_s * 0.5

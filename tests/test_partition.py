@@ -1,5 +1,4 @@
 """Unit + property tests for partition geometry (core/partition.py)."""
-import math
 
 import pytest
 

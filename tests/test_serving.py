@@ -1,0 +1,150 @@
+"""Serving layer: batched stage scaling, batch-size choice under a p99
+bound, simulator-in-the-loop refinement, and the stage-count contract
+between the plan, the simulator, and the engine."""
+import numpy as np
+import pytest
+
+from repro.cluster import (asym_uplink, build_stages, choose_batch,
+                           cluster_pipeline_frontier, cluster_plan_search,
+                           homogeneous, mixed_fast_slow,
+                           refine_with_simulator, serve_point, simulate,
+                           sweep_serving)
+from repro.configs.edge_models import EDGE_MODELS
+from repro.core import Objective, plan_stage_counts
+from repro.core.graph import ConvT, LayerSpec, chain
+
+
+def small_chain():
+    return chain("serve4", [
+        LayerSpec("c0", ConvT.CONV, 24, 24, 3, 8, 3, 1, 1),
+        LayerSpec("c1", ConvT.CONV, 24, 24, 8, 8, 3, 1, 1),
+        LayerSpec("pw", ConvT.POINTWISE, 24, 24, 8, 16, 1, 1, 0),
+        LayerSpec("c2", ConvT.CONV, 24, 24, 16, 8, 3, 1, 1),
+    ])
+
+
+def test_batch_scales_compute_linearly_but_not_message_latency():
+    g = small_chain()
+    cl = homogeneous(4)
+    plan = cluster_plan_search(g, cl).plan
+    s1 = build_stages(g, plan, cl, batch_size=1)
+    s4 = build_stages(g, plan, cl, batch_size=4)
+    assert len(s1) == len(s4)
+    lat_s = cl.links[0].latency_us * 1e-6
+    for a, b in zip(s1, s4):
+        assert a.kind == b.kind
+        da = np.asarray(a.durations)
+        db = np.asarray(b.durations)
+        if a.kind == "compute":
+            assert np.allclose(db, 4.0 * da, rtol=1e-12)
+        elif da.size and da.max() > 0.0:
+            # bytes quadruple, per-message latency does not
+            msgs = np.round((4.0 * da - db) / (3.0 * lat_s))
+            assert np.all(4.0 * da - db >= -1e-15)
+            assert np.allclose(db, 4.0 * da - msgs * 3.0 * lat_s,
+                               rtol=1e-9)
+
+
+def test_batch_size_validation():
+    g = small_chain()
+    cl = homogeneous(2)
+    plan = cluster_plan_search(g, cl).plan
+    with pytest.raises(ValueError):
+        build_stages(g, plan, cl, batch_size=0)
+
+
+def test_single_request_latency_independent_of_batching_accounting():
+    """batch_size=1 must be the historical behavior bit for bit."""
+    g = EDGE_MODELS["mobilenet"]()
+    cl = mixed_fast_slow(4)
+    plan = cluster_plan_search(g, cl).plan
+    a = simulate(g, plan, cl, n_requests=4)
+    b = simulate(g, plan, cl, n_requests=4, batch_size=1)
+    assert a.latencies_s == b.latencies_s
+    assert a.throughput_rps == b.throughput_rps
+
+
+def test_serve_point_stability_and_p99_accounting():
+    g = small_chain()
+    cl = homogeneous(4)
+    plan = cluster_plan_search(g, cl).plan
+    cap = simulate(g, plan, cl, n_requests=16).throughput_rps
+    easy = serve_point(g, plan, cl, arrival_rate_rps=cap * 0.5,
+                       batch_size=1, p99_bound_s=10.0)
+    assert easy.stable and easy.feasible
+    assert easy.goodput_rps == pytest.approx(cap * 0.5)
+    hot = serve_point(g, plan, cl, arrival_rate_rps=cap * 3.0,
+                      batch_size=1, p99_bound_s=10.0, n_batches=16)
+    assert not hot.stable and hot.goodput_rps == 0.0
+    # batching adds the batch-fill wait to the tail
+    b4 = serve_point(g, plan, cl, arrival_rate_rps=cap * 0.5,
+                     batch_size=4, p99_bound_s=10.0)
+    assert b4.p99_latency_s >= 3.0 / (cap * 0.5) - 1e-12
+
+
+def test_choose_batch_maximizes_goodput_under_bound():
+    g = small_chain()
+    cl = homogeneous(4)
+    plan = cluster_plan_search(g, cl).plan
+    lat = cluster_plan_search(g, cl).cost
+    cap = simulate(g, plan, cl, n_requests=16).throughput_rps
+    best, pts = choose_batch(g, plan, cl, arrival_rate_rps=cap * 0.6,
+                             p99_bound_s=lat * 20,
+                             batch_sizes=(1, 2, 4))
+    assert best.feasible
+    assert best.goodput_rps == max(p.goodput_rps for p in pts)
+    # impossible bound: nothing feasible, fallback reports zero goodput
+    none_ok, pts2 = choose_batch(g, plan, cl, arrival_rate_rps=cap * 0.6,
+                                 p99_bound_s=lat * 1e-3,
+                                 batch_sizes=(1, 2))
+    assert not none_ok.feasible and none_ok.goodput_rps == 0.0
+    rows = sweep_serving(g, plan, cl, [cap * 0.4, cap * 0.8], lat * 20,
+                         batch_sizes=(1, 2))
+    assert len(rows) == 2 and all("per_batch" in r for r in rows)
+
+
+def test_refinement_never_loses_to_unrefined_throughput_plan():
+    g = EDGE_MODELS["inception"]()
+    cl = mixed_fast_slow(8)
+    fr = cluster_pipeline_frontier(g, cl)
+    rr = refine_with_simulator(g, cl, n_requests=16, max_iters=4,
+                               frontier=fr)
+    base = cluster_plan_search(g, cl, objective=Objective.THROUGHPUT)
+    base_rep = simulate(g, base.plan, cl, n_requests=16)
+    assert rr.throughput_rps >= base_rep.throughput_rps * (1 - 1e-9)
+    assert len(rr.steps) >= 1
+    s0 = rr.steps[0]
+    assert s0.beta == 1.0 and s0.alpha == 1.0
+    # measured occupancies never exceed their analytic upper bounds
+    for s in rr.steps:
+        assert s.dev_occupancy_s <= s.compute_s * (1 + 1e-9)
+        assert s.link_occupancy_s <= s.sync_s * (1 + 1e-9)
+
+
+def test_stage_counts_contract_plan_vs_simulator():
+    for model in ("mobilenet", "resnet18", "inception"):
+        g = EDGE_MODELS[model]()
+        cl = asym_uplink(4)
+        for objective in (Objective.LATENCY, Objective.THROUGHPUT):
+            plan = cluster_plan_search(g, cl, objective=objective).plan
+            nc, ns = plan_stage_counts(g, plan)
+            stages = build_stages(g, plan, cl)
+            assert nc == sum(1 for s in stages if s.kind == "compute")
+            assert ns == sum(1 for s in stages if s.kind == "sync")
+
+
+def test_stage_counts_contract_engine():
+    import jax
+
+    from repro.runtime.engine import init_weights, run_partitioned
+
+    g = small_chain()
+    cl = homogeneous(4)
+    plan = cluster_plan_search(g, cl, objective=Objective.THROUGHPUT).plan
+    nc, _ = plan_stage_counts(g, plan)
+    w = init_weights(g, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (g.layers[0].in_h, g.layers[0].in_w,
+                           g.layers[0].in_c))
+    _, stats = run_partitioned(g, w, x, plan, 4)
+    assert stats.compute_stages == nc

@@ -1,17 +1,14 @@
 """Sharding rules: every emitted PartitionSpec must divide its tensor, for
 every architecture x strategy x mode, on a production-shaped (4,4) proxy
 mesh (same divisibility structure as (16,16) scaled down for CPU)."""
-import itertools
 
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.models.transformer import Model
-from repro.optim import adamw_init
-from repro.runtime.shard_plan import (Strategy, batch_specs, cache_specs,
+from repro.runtime.shard_plan import (Strategy, cache_specs,
                                       param_specs)
 
 

@@ -5,7 +5,6 @@ chunked forms (121x/116x memory-term wins); these tests pin their
 exactness — forward and gradients — across chunk sizes, sequence lengths
 that don't divide the chunk, and random decay magnitudes.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
