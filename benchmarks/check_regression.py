@@ -18,6 +18,13 @@ Usage (what the CI jobs run)::
         --current BENCH_search.json
     python -m benchmarks.check_regression --kind sweep \
         --current BENCH_sweep.json
+    python -m benchmarks.check_regression --kind kernels \
+        --current BENCH_kernels.json
+
+``--kind kernels`` additionally hard-fails on a flipped kernel
+``conformant`` flag or a pallas/xla engine-equivalence (``agree`` /
+``stats_equal``) flag — kernel drift is a correctness bug, not a perf
+regression.
 
 Exit code 0 = clean, 1 = regression (violations listed on stderr).
 """
@@ -135,9 +142,43 @@ def check_sweep(current: dict, baseline: dict, max_ratio: float,
     return bad
 
 
+def check_kernels(current: dict, baseline: dict, max_ratio: float,
+                  min_us: float) -> List[str]:
+    bad: List[str] = []
+    for name, rec in baseline.get("kernels", {}).items():
+        cur = current.get("kernels", {}).get(name)
+        if cur is None:
+            bad.append(f"kernels/{name}: missing from current record")
+            continue
+        if not cur.get("conformant", False):
+            bad.append(f"kernels/{name}: Pallas kernel no longer conformant "
+                       f"(max_rel_err {cur.get('max_rel_err')})")
+        base_us = float(rec["pallas_us"])
+        cur_us = float(cur["pallas_us"])
+        if base_us >= min_us and cur_us > max_ratio * base_us:
+            bad.append(f"kernels/{name}: pallas time {cur_us:.0f}us > "
+                       f"{max_ratio:g}x baseline {base_us:.0f}us")
+    for model, rec in baseline.get("backend_equiv", {}).items():
+        cur = current.get("backend_equiv", {}).get(model)
+        if cur is None:
+            bad.append(f"kernels/equiv/{model}: missing from current")
+            continue
+        if not cur.get("agree", False):
+            bad.append(f"kernels/equiv/{model}: pallas/xla engine outputs "
+                       f"diverged (rel_err {cur.get('rel_err')})")
+        if not cur.get("stats_equal", False):
+            bad.append(f"kernels/equiv/{model}: ExecStats no longer "
+                       f"backend-independent")
+    return bad
+
+
+_CHECKERS = {"search": check_search, "sweep": check_sweep,
+             "kernels": check_kernels}
+
+
 def main(argv: List[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--kind", choices=("search", "sweep"), required=True)
+    ap.add_argument("--kind", choices=tuple(_CHECKERS), required=True)
     ap.add_argument("--current", required=True,
                     help="freshly produced BENCH json")
     ap.add_argument("--baseline", default=None,
@@ -153,8 +194,8 @@ def main(argv: List[str] | None = None) -> int:
         _BASELINE_DIR, f"BENCH_{args.kind}.json")
     current = _load(args.current)
     baseline = _load(baseline_path)
-    checker = check_search if args.kind == "search" else check_sweep
-    bad = checker(current, baseline, args.max_ratio, args.min_us)
+    bad = _CHECKERS[args.kind](current, baseline, args.max_ratio,
+                               args.min_us)
     if bad:
         print(f"REGRESSION: {len(bad)} violation(s) vs {baseline_path}",
               file=sys.stderr)

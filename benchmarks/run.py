@@ -12,8 +12,8 @@ def main(argv: list[str] | None = None) -> None:
     json_path = json_arg(argv)
 
     from . import (engine_comm, estimator_quality, fig2_microbench,
-                   fig7_fig9_comparison, fig8_score, roofline_table,
-                   search_time, sweep, tpu_ce)
+                   fig7_fig9_comparison, fig8_score, kernel_bench,
+                   roofline_table, search_time, sweep, tpu_ce)
     print("name,us_per_call,derived")
     fig2_microbench.run()
     fig7_fig9_comparison.run(4, "fig7")
@@ -24,6 +24,9 @@ def main(argv: list[str] | None = None) -> None:
     # benchmarks.sweep --json)
     sweep.run(smoke=True)
     engine_comm.run()
+    # Pallas-vs-XLA shard kernel timings + conformance flags (JSON via
+    # benchmarks.kernel_bench --json)
+    kernel_bench.run()
     # data-driven CE: small trace budget by default (full 330K via
     # benchmarks.estimator_quality --full)
     estimator_quality.run(n_samples=8_000, trees=40)

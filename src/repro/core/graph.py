@@ -321,6 +321,31 @@ class ModelGraph:
 
 
 # ---------------------------------------------------------------------------
+# Kernel-geometry helpers — the conformance-grid axes for the Pallas shard
+# kernels (tests/test_kernel_conformance.py sweeps every key returned here).
+# ---------------------------------------------------------------------------
+
+def conv_geometries(graph: "ModelGraph"
+                    ) -> Tuple[Tuple[ConvT, int, int, int], ...]:
+    """All distinct ``(conv_t, k, s, p)`` geometry keys occurring in the
+    graph, sorted.  This is exactly the set of per-layer kernel geometries a
+    backend must support (or cleanly fall back on) to execute the model."""
+    return tuple(sorted({(l.conv_t, l.k, l.s, l.p) for l in graph.layers}))
+
+
+def shard_halo_pads(p: int) -> Tuple[Tuple[int, int, int, int], ...]:
+    """The distinct ``(top, bottom, left, right)`` zero-pad signatures a
+    shard of a ``p``-padded conv can occupy under the spatial schemes: a
+    corner / edge / interior cell of a 2-D grid sees the map padding only on
+    its outward sides — inward sides carry real halo rows instead (the 1-D
+    InH/InW splits are the edge-row/col subsets).  ``p == 0`` collapses to
+    the single all-zero signature."""
+    tb = [(p, p), (p, 0), (0, 0), (0, p)] if p else [(0, 0)]
+    return tuple(dict.fromkeys(
+        (t, b, lft, r) for t, b in tb for lft, r in tb))
+
+
+# ---------------------------------------------------------------------------
 # Receptive-field math — the heart of NT-mode (redundant-compute) planning.
 # ---------------------------------------------------------------------------
 

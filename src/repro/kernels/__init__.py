@@ -1,3 +1,14 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas shard kernels for the engine hot path (+ flash attention).
+
+Public surface: the jit'd wrappers in :mod:`repro.kernels.ops` (automatic
+XLA fallback on unsupported geometries), the raw shard kernel
+:func:`repro.kernels.conv2d.conv2d_shard` consumed by the engine's
+``backend="pallas"`` path, and the jnp oracles in :mod:`repro.kernels.ref`.
+"""
+from .conv2d import UnsupportedGeometry, conv2d_shard, conv2d_tiled
+from .ops import conv2d, dwconv2d, flash_attention, matmul, matmul_tiled
+
+__all__ = [
+    "UnsupportedGeometry", "conv2d", "conv2d_shard", "conv2d_tiled",
+    "dwconv2d", "flash_attention", "matmul", "matmul_tiled",
+]

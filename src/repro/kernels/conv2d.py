@@ -1,68 +1,147 @@
-"""Pallas TPU conv2d with output-row tiling — the FlexPie compute hot spot.
+"""Pallas TPU conv2d shard kernels — the FlexPie compute hot spot.
 
 The edge engine's partitioned inference runs conv shards with halo rows
-(§2.3 of the paper).  This kernel is the TPU-native version of one shard's
-compute: the (pre-padded) input lives in VMEM, the output is tiled by rows,
-and each (kh, kw) kernel tap is an MXU matmul ``[tile_h*W, Cin] @
-[Cin, Cout]`` accumulated in f32 — im2col without materializing the im2col
-matrix.  The halo handling mirrors NT-mode: a tile reads ``K-1`` rows past
-its own range, exactly the redundant-compute region the planner accounts
-for.
+(§2.3 of the paper).  :func:`conv2d_shard` is the TPU-native version of one
+shard's compute and consumes the NT-mode shard layout *directly*: the local
+input slice — its own rows plus the halo rows backward-chained from the
+segment tail — lands in VMEM as-is, and any zero padding at the graph
+boundary is applied once into a VMEM scratch buffer on the first grid step
+(``pl.when(i == 0)``; scratch persists across the sequential grid), so no
+padded copy of the feature map is ever re-materialized in HBM per segment
+layer.
 
-Stride-1 convs only (the edge models' 3x3/1x1 layers); strided layers fall
-back to the jnp reference in ops.py.  Validated with interpret=True.
+The compute is im2col without materializing the im2col matrix: the output
+is tiled by rows and each (kh, kw) kernel tap is an MXU matmul
+``[tile_h*W, Cin] @ [Cin, Cout]`` accumulated in f32.  Strided convs load
+the contiguous tap span and re-stride in registers; depthwise convs replace
+the tap matmul with a VPU broadcast-multiply.  A tile deliberately reads
+``K-1`` rows past its own range — exactly the redundant-compute region the
+planner accounts for.
+
+Degenerate geometries (``out_h <= 0`` or ``out_w <= 0`` after padding)
+raise :class:`UnsupportedGeometry`; callers (``ops.conv2d``, the engine's
+pallas backend) catch it and fall back to the XLA path.  Validated with
+``interpret=True`` (this container is CPU-only); the grid/BlockSpec/scratch
+structure is the TPU deployment artifact.
 """
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Pads = Tuple[int, int, int, int]   # (top, bottom, left, right)
 
 
-def _conv_kernel(x_ref, w_ref, o_ref, *, k: int, tile_h: int, out_w: int,
-                 cin: int, cout: int):
+class UnsupportedGeometry(ValueError):
+    """Raised when a conv geometry cannot be lowered to the Pallas kernel
+    (callers fall back to XLA)."""
+
+
+def shard_out_shape(in_h: int, in_w: int, k: int, stride: int,
+                    pads: Pads) -> Tuple[int, int]:
+    """Output (H, W) of a conv over a [in_h, in_w] shard with explicit
+    per-side zero padding ``pads`` and square kernel ``k``."""
+    pt, pb, pl_, pr = pads
+    out_h = (in_h + pt + pb - k) // stride + 1
+    out_w = (in_w + pl_ + pr - k) // stride + 1
+    return out_h, out_w
+
+
+def _shard_kernel(x_ref, w_ref, o_ref, xp_ref, *, k: int, stride: int,
+                  pads: Pads, tile_h: int, out_w: int, cin: int, cout: int,
+                  depthwise: bool, in_h: int, in_w: int):
     i = pl.program_id(0)
-    acc = jnp.zeros((tile_h * out_w, cout), jnp.float32)
+    pt, _, pl_, _ = pads
+
+    @pl.when(i == 0)
+    def _fill_scratch():
+        # one VMEM zero-fill for the whole shard; halo rows arrive in the
+        # raw input and are consumed in place (never copied through HBM)
+        xp_ref[...] = jnp.zeros_like(xp_ref)
+        xp_ref[pt:pt + in_h, pl_:pl_ + in_w, :] = x_ref[...]
+
+    rspan = (tile_h - 1) * stride + 1
+    cspan = (out_w - 1) * stride + 1
+    if depthwise:
+        acc = jnp.zeros((tile_h, out_w, cout), jnp.float32)
+    else:
+        acc = jnp.zeros((tile_h * out_w, cout), jnp.float32)
     for kh in range(k):
         for kw in range(k):
-            # rows [i*tile_h + kh, ...), cols [kw, kw+out_w)
-            xs = x_ref[pl.dslice(i * tile_h + kh, tile_h),
-                       pl.dslice(kw, out_w), :]
-            xm = xs.reshape(tile_h * out_w, cin).astype(jnp.float32)
-            wm = w_ref[kh, kw].astype(jnp.float32)      # [cin, cout]
-            acc = acc + jax.lax.dot_general(
-                xm, wm, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
+            # logical padded rows [i*tile_h*s + kh, ...) strided by s
+            span = xp_ref[pl.dslice(i * tile_h * stride + kh, rspan),
+                          pl.dslice(kw, cspan), :]
+            xs = span[::stride, ::stride, :].astype(jnp.float32)
+            if depthwise:
+                acc = acc + xs * w_ref[kh, kw, 0].astype(jnp.float32)
+            else:
+                xm = xs.reshape(tile_h * out_w, cin)
+                wm = w_ref[kh, kw].astype(jnp.float32)      # [cin, cout]
+                acc = acc + jax.lax.dot_general(
+                    xm, wm, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
     o_ref[...] = acc.reshape(tile_h, out_w, cout).astype(o_ref.dtype)
 
 
-def conv2d_tiled(x: jnp.ndarray, w: jnp.ndarray, *, padding: int = 0,
-                 tile_h: int = 8, interpret: bool = True) -> jnp.ndarray:
-    """x: [H, W, Cin] (unpadded); w: [K, K, Cin, Cout]; stride 1."""
+def conv2d_shard(x: jnp.ndarray, w: jnp.ndarray, *, pads: Pads = (0, 0, 0, 0),
+                 stride: int = 1, depthwise: bool = False, tile_h: int = 8,
+                 interpret: bool = True) -> jnp.ndarray:
+    """One conv shard over the NT-mode local layout.
+
+    ``x``: [Hl, Wl, Cin] — the node's raw input slice, halo rows included,
+    NOT zero-padded.  ``w``: [K, K, Cin, Cout] (depthwise: [K, K, 1, C]).
+    ``pads`` is the logical zero padding of this shard's position in the
+    full feature map (interior shards: all zero — their "padding" is real
+    halo data already inside ``x``).
+    """
     K = w.shape[0]
-    cin, cout = w.shape[2], w.shape[3]
-    xp = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
-    Hp, Wp, _ = xp.shape
-    out_h = Hp - K + 1
-    out_w = Wp - K + 1
-    # pad output rows to a tile multiple (extra rows computed then dropped)
+    if w.shape[1] != K:
+        raise UnsupportedGeometry(f"non-square kernel {w.shape[:2]}")
+    if stride < 1:
+        raise UnsupportedGeometry(f"stride {stride}")
+    Hl, Wl, cin = x.shape
+    cout = cin if depthwise else w.shape[3]
+    out_h, out_w = shard_out_shape(Hl, Wl, K, stride, pads)
+    if out_h <= 0 or out_w <= 0 or cin <= 0 or cout <= 0:
+        raise UnsupportedGeometry(
+            f"degenerate output {out_h}x{out_w}x{cout} for input "
+            f"{Hl}x{Wl}x{cin}, k={K}, s={stride}, pads={pads}")
+    pt, pb, pl_, pr = pads
+    tile_h = max(1, min(tile_h, out_h))
     nt = -(-out_h // tile_h)
-    pad_rows = nt * tile_h - out_h
-    if pad_rows:
-        xp = jnp.pad(xp, ((0, pad_rows), (0, 0), (0, 0)))
-    kernel = functools.partial(_conv_kernel, k=K, tile_h=tile_h, out_w=out_w,
-                               cin=cin, cout=cout)
+    # scratch must cover the last tile's deepest tap row (padded rows past
+    # out_h are computed then dropped)
+    rows = max(Hl + pt + pb, (nt * tile_h - 1) * stride + K)
+    cols = Wl + pl_ + pr
+    kernel = functools.partial(
+        _shard_kernel, k=K, stride=stride, pads=pads, tile_h=tile_h,
+        out_w=out_w, cin=cin, cout=cout, depthwise=depthwise,
+        in_h=Hl, in_w=Wl)
     out = pl.pallas_call(
         kernel,
         grid=(nt,),
         in_specs=[
-            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),     # input in VMEM
+            pl.BlockSpec(x.shape, lambda i: (0, 0, 0)),     # shard in VMEM
             pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((tile_h, out_w, cout), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((nt * tile_h, out_w, cout), x.dtype),
+        scratch_shapes=[pltpu.VMEM((rows, cols, cin), x.dtype)],
         interpret=interpret,
-    )(xp, w)
+    )(x, w)
     return out[:out_h]
+
+
+def conv2d_tiled(x: jnp.ndarray, w: jnp.ndarray, *, padding: int = 0,
+                 stride: int = 1, tile_h: int = 8,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Full-tensor convenience form: x [H, W, Cin] unpadded, symmetric
+    ``padding``.  Thin wrapper over :func:`conv2d_shard` (a one-shard
+    "plan"); kept as the historical public name."""
+    return conv2d_shard(x, w, pads=(padding,) * 4, stride=stride,
+                        tile_h=tile_h, interpret=interpret)

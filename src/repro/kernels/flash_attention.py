@@ -65,7 +65,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
     # causal upper bound: kv blocks beyond the diagonal contribute nothing
     hi = nk if not causal else jnp.minimum(
         nk, ((qi + 1) * block_q + block_k - 1) // block_k)
-    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+    # sliding-window lower bound: block j is fully masked when its last key
+    # (j+1)*block_k - 1 <= min_q - window, so start at the first block that
+    # can reach the tile's earliest query
+    lo = 0 if window is None else jnp.maximum(
+        0, (qi * block_q - window) // block_k)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
     o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
 
 

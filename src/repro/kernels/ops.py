@@ -2,9 +2,11 @@
 
 ``flash_attention`` takes the model-layout [B, H, S, hd] (+ GQA kv heads),
 pads the sequence to block multiples and dispatches to the kernel;
-``conv2d`` picks the Pallas path for stride-1 convs and the jnp reference
-otherwise.  ``interpret=True`` everywhere in this container (CPU); on a TPU
-deployment the same calls compile natively.
+``conv2d`` / ``dwconv2d`` route through the shard kernel for any supported
+geometry (stride >= 1, square kernel, non-degenerate output) with an
+automatic XLA fallback otherwise; ``matmul`` is the row-tiled MXU kernel
+behind the engine's FC layers.  ``interpret=True`` everywhere in this
+container (CPU); on a TPU deployment the same calls compile natively.
 """
 from __future__ import annotations
 
@@ -14,8 +16,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
-from .conv2d import conv2d_tiled
+from .conv2d import UnsupportedGeometry, conv2d_shard
 from .flash_attention import flash_attention_bh
 
 
@@ -47,19 +50,94 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return out.reshape(B, H, Sp, hd)[:, :, :S, :]
 
 
+# ---------------------------------------------------------------------------
+# Row-tiled matmul — the FC / pointwise-as-matmul shard kernel.
+# ---------------------------------------------------------------------------
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def matmul_tiled(x: jnp.ndarray, w: jnp.ndarray, *, tile_m: int = 128,
+                 interpret: bool = True) -> jnp.ndarray:
+    """x: [M, Cin] @ w: [Cin, Cout], output rows tiled by ``tile_m`` (each
+    tile is one MXU matmul; rows pad to the tile multiple and are dropped
+    on return).  Engine FC shards are [seq, Cin] with Cin/Cout possibly
+    channel-sliced by the plan — any shape goes."""
+    M, cin = x.shape
+    cout = w.shape[1]
+    if M == 0 or cin == 0 or cout == 0:
+        raise UnsupportedGeometry(f"degenerate matmul {x.shape} @ {w.shape}")
+    tile_m = max(1, min(tile_m, M))
+    nt = -(-M // tile_m)
+    pad = nt * tile_m - M
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((tile_m, cin), lambda i: (i, 0)),
+            pl.BlockSpec((cin, cout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt * tile_m, cout), x.dtype),
+        interpret=interpret,
+    )(xp, w)
+    return out[:M]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "interpret"))
+def matmul(x: jnp.ndarray, w: jnp.ndarray, *, tile_m: int = 128,
+           interpret: bool = True) -> jnp.ndarray:
+    """Jit'd :func:`matmul_tiled` with XLA fallback on degenerate shapes."""
+    try:
+        return matmul_tiled(x, w, tile_m=tile_m, interpret=interpret)
+    except UnsupportedGeometry:
+        return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Conv wrappers: Pallas when supported, XLA fallback otherwise.
+# ---------------------------------------------------------------------------
+
+def _conv_xla(x: jnp.ndarray, w: jnp.ndarray, *, padding: int, stride: int,
+              groups: int = 1) -> jnp.ndarray:
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding=[(padding, padding)] * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    return out[0].astype(x.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("padding", "stride", "tile_h",
                                              "interpret"))
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, padding: int = 0,
            stride: int = 1, tile_h: int = 8,
            interpret: bool = True) -> jnp.ndarray:
-    """x: [H, W, Cin]; w: [K, K, Cin, Cout]."""
-    if stride == 1:
-        return conv2d_tiled(x, w, padding=padding, tile_h=tile_h,
+    """x: [H, W, Cin]; w: [K, K, Cin, Cout]; any stride.  Pallas path for
+    every non-degenerate square-kernel geometry; degenerate outputs
+    (``out_h/out_w <= 0``) fall back to XLA cleanly."""
+    try:
+        return conv2d_shard(x, w, pads=(padding,) * 4, stride=stride,
+                            tile_h=tile_h, interpret=interpret)
+    except UnsupportedGeometry:
+        return _conv_xla(x, w, padding=padding, stride=stride)
+
+
+@functools.partial(jax.jit, static_argnames=("padding", "stride", "tile_h",
+                                             "interpret"))
+def dwconv2d(x: jnp.ndarray, w: jnp.ndarray, *, padding: int = 0,
+             stride: int = 1, tile_h: int = 8,
+             interpret: bool = True) -> jnp.ndarray:
+    """Depthwise conv: x [H, W, C]; w [K, K, 1, C] (engine layout)."""
+    try:
+        return conv2d_shard(x, w, pads=(padding,) * 4, stride=stride,
+                            depthwise=True, tile_h=tile_h,
                             interpret=interpret)
-    # strided layers: jnp reference path (kernel targets the stride-1
-    # 3x3/1x1 bulk of the edge benchmarks)
-    out = jax.lax.conv_general_dilated(
-        x[None].astype(jnp.float32), w.astype(jnp.float32),
-        window_strides=(stride, stride), padding=[(padding, padding)] * 2,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return out[0].astype(x.dtype)
+    except UnsupportedGeometry:
+        return _conv_xla(x, w, padding=padding, stride=stride,
+                         groups=x.shape[-1])

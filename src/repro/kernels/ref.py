@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import math
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,11 +31,42 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
-def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, *, padding: int = 0
-               ) -> jnp.ndarray:
-    """x: [H, W, Cin]; w: [K, K, Cin, Cout]; stride 1.  -> [Ho, Wo, Cout]."""
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, *, padding: int = 0,
+               stride: int = 1) -> jnp.ndarray:
+    """x: [H, W, Cin]; w: [K, K, Cin, Cout].  -> [Ho, Wo, Cout]."""
     out = jax.lax.conv_general_dilated(
         x[None].astype(jnp.float32), w.astype(jnp.float32),
-        window_strides=(1, 1), padding=[(padding, padding)] * 2,
+        window_strides=(stride, stride), padding=[(padding, padding)] * 2,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     return out[0].astype(x.dtype)
+
+
+def dwconv2d_ref(x: jnp.ndarray, w: jnp.ndarray, *, padding: int = 0,
+                 stride: int = 1) -> jnp.ndarray:
+    """Depthwise reference: x [H, W, C]; w [K, K, 1, C]."""
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding=[(padding, padding)] * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1])
+    return out[0].astype(x.dtype)
+
+
+def conv2d_shard_ref(x: jnp.ndarray, w: jnp.ndarray, *,
+                     pads: Tuple[int, int, int, int] = (0, 0, 0, 0),
+                     stride: int = 1,
+                     depthwise: bool = False) -> jnp.ndarray:
+    """Shard-layout reference with per-side zero pads (the oracle for
+    :func:`repro.kernels.conv2d.conv2d_shard`)."""
+    pt, pb, pl_, pr = pads
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding=[(pt, pb), (pl_, pr)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1] if depthwise else 1)
+    return out[0].astype(x.dtype)
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: [M, Cin] @ w: [Cin, Cout] in f32 accumulation."""
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)

@@ -17,6 +17,17 @@ next branch continues.
 
 Correctness contract (tested): for ANY valid plan — chain or DAG — the
 reassembled output is identical to the unpartitioned reference inference.
+
+Backends: ``run_partitioned(..., backend="pallas")`` dispatches every
+NT-fused segment layer to the Pallas shard kernels (``repro.kernels``) —
+conv/depthwise/pointwise shards consume their halo-extended local slice
+directly (zero padding applied in VMEM, no re-materialized padded copy per
+segment layer) and FC layers run the row-tiled MXU matmul.  Geometries the
+kernels cannot lower (POOL, degenerate shard outputs) fall back to the XLA
+path per layer record automatically; ``backend="xla"`` (default) is the
+historical ``lax.conv_general_dilated`` lowering.  The backend is part of
+the compiled-segment cache key, so both backends stay jit-cached side by
+side.
 """
 from __future__ import annotations
 
@@ -32,8 +43,17 @@ from repro.core.graph import ConvT, LayerSpec, ModelGraph
 from repro.core.partition import (DTYPE_BYTES, Mode, Scheme, grid_dims,
                                   split_sizes)
 from repro.core.plan import Plan, steps_segments
+from repro.kernels.conv2d import UnsupportedGeometry, conv2d_shard
+from repro.kernels.ops import matmul_tiled
 
 Rect = Tuple[Tuple[int, int], Tuple[int, int], Tuple[int, int]]
+
+BACKENDS = ("xla", "pallas")
+
+
+def _pallas_interpret() -> bool:
+    """Interpret-mode Pallas everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
 
 
 # ---------------------------------------------------------------------------
@@ -272,14 +292,56 @@ def _apply_record(rec: _SegRec, w, x: jnp.ndarray) -> jnp.ndarray:
     return out[:, :, chans[0]:chans[1]]
 
 
+def _apply_record_pallas(rec: _SegRec, w, x: jnp.ndarray) -> jnp.ndarray:
+    """Pallas lowering of one segment-layer record: the local slice (halo
+    rows included) goes to the shard kernel as-is with its per-side zero
+    pads.  Raises :class:`UnsupportedGeometry` for records the kernels
+    cannot lower (POOL, degenerate shard outputs) — the caller falls back
+    to the XLA record path."""
+    conv_t, k, s, pads, sl, chans = rec
+    conv_t = ConvT(conv_t)
+    interp = _pallas_interpret()
+    if conv_t == ConvT.FC:
+        seg = x.reshape(x.shape[0], x.shape[-1])
+        out = matmul_tiled(seg, w[:, chans[0]:chans[1]], interpret=interp)
+        return out.reshape(x.shape[0], 1, chans[1] - chans[0])
+    if conv_t in (ConvT.ADD, ConvT.CONCAT):
+        return x[:, :, chans[0]:chans[1]]
+    if conv_t not in (ConvT.CONV, ConvT.POINTWISE, ConvT.DWCONV):
+        raise UnsupportedGeometry(f"no pallas kernel for {conv_t.name}")
+    pt, pb, pl_, pr = pads
+    r0, r1, c0, c1 = sl
+    xs = x[r0:r1, c0:c1, :]
+    if conv_t == ConvT.DWCONV:
+        out = conv2d_shard(xs, w, pads=(pt, pb, pl_, pr), stride=s,
+                           depthwise=True, interpret=interp)
+        return out[:, :, chans[0]:chans[1]]
+    wsel = w[:, :, :, chans[0]:chans[1]]
+    return conv2d_shard(xs, wsel, pads=(pt, pb, pl_, pr), stride=s,
+                        interpret=interp)
+
+
+def _apply_record_b(rec: _SegRec, w, x: jnp.ndarray,
+                    backend: str) -> jnp.ndarray:
+    """Backend dispatch for one record.  Geometry support is static (shapes
+    are known at trace time), so the pallas->xla fallback resolves during
+    tracing and costs nothing at run time."""
+    if backend == "pallas":
+        try:
+            return _apply_record_pallas(rec, w, x)
+        except UnsupportedGeometry:
+            pass
+    return _apply_record(rec, w, x)
+
+
 @functools.lru_cache(maxsize=None)
-def _compiled_segment(recs: Tuple[_SegRec, ...]):
-    """Jitted program for one segment-cell signature.  ``jax.jit`` adds its
-    own shape/dtype guard under this entry, so one signature serves every
-    input that shares the geometry."""
+def _compiled_segment(recs: Tuple[_SegRec, ...], backend: str = "xla"):
+    """Jitted program for one (segment-cell signature, backend) pair.
+    ``jax.jit`` adds its own shape/dtype guard under this entry, so one
+    signature serves every input that shares the geometry."""
     def run(x, ws):
         for rec, w in zip(recs, ws):
-            x = _apply_record(rec, w, x)
+            x = _apply_record_b(rec, w, x, backend)
         return x
     return jax.jit(run)
 
@@ -301,7 +363,8 @@ def _run_branch(layers: Sequence[LayerSpec],
                 owned: Optional[List[List[Rect]]],
                 nodes: int,
                 stats: ExecStats,
-                jit_segments: bool = True
+                jit_segments: bool = True,
+                backend: str = "xla"
                 ) -> Tuple[jnp.ndarray, List[List[Rect]]]:
     """Execute one chain of layers segment by segment.  ``x`` is the full
     input tensor at the branch entry; ``owned`` is the per-node layout it is
@@ -339,8 +402,13 @@ def _run_branch(layers: Sequence[LayerSpec],
                     computed += _rect_elems(need[li])
                 if jit_segments:
                     recs = _segment_records(layers, a, b, need, in_rect)
-                    node_x = _compiled_segment(recs)(
+                    node_x = _compiled_segment(recs, backend)(
                         node_x, tuple(weights[a:b + 1]))
+                elif backend != "xla":
+                    # eager non-XLA path: same per-record dispatch, no jit
+                    recs = _segment_records(layers, a, b, need, in_rect)
+                    for rec, w in zip(recs, weights[a:b + 1]):
+                        node_x = _apply_record_b(rec, w, node_x, backend)
                 else:
                     origin = (in_r[0], in_c[0])
                     for li in range(a, b + 1):
@@ -401,19 +469,25 @@ def _merge_comm_bytes(l: LayerSpec, prods: Sequence[int],
 
 def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
                     nodes: int,
-                    jit_segments: bool = True
+                    jit_segments: bool = True,
+                    backend: str = "xla"
                     ) -> Tuple[jnp.ndarray, ExecStats]:
     """Execute ``plan`` on ``nodes`` simulated devices.  ``jit_segments``
     routes each segment cell through the compiled-program cache (repeated
     blocks compile once and reuse across calls); ``False`` keeps the
-    historical eager path."""
+    historical eager path.  ``backend`` selects the segment-layer lowering:
+    ``"xla"`` (generic ``conv_general_dilated``) or ``"pallas"`` (shard
+    kernels with automatic per-record XLA fallback); stats accounting is
+    backend-independent by construction."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {BACKENDS}")
     stats = ExecStats()
     if graph.is_chain:
         plan.validate()
         if len(plan) != len(graph):
             raise ValueError("plan/graph length mismatch")
         full, _ = _run_branch(graph.layers, weights, plan.steps, x, None,
-                              nodes, stats, jit_segments)
+                              nodes, stats, jit_segments, backend)
         return full, stats
 
     plan.validate_for(graph)
@@ -449,7 +523,7 @@ def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
             ws = [weights[i] for i in rest]
             st = [plan.steps[i] for i in rest]
             cur, owned = _run_branch(ls, ws, st, cur, owned, nodes, stats,
-                                     jit_segments)
+                                     jit_segments, backend)
         outs[ids[-1]] = cur
         owned_map[ids[-1]] = owned
     return outs[len(graph) - 1], stats

@@ -4,7 +4,8 @@ import copy
 import json
 import os
 
-from benchmarks.check_regression import check_search, check_sweep, main
+from benchmarks.check_regression import (check_kernels, check_search,
+                                         check_sweep, main)
 
 _BASE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                      "baselines")
@@ -32,9 +33,52 @@ SWEEP = {
 }
 
 
+KERNELS = {
+    "interpret": True,
+    "kernels": {
+        "conv3x3_s1": {"pallas_us": 9000.0, "xla_us": 700.0, "ratio": 12.9,
+                       "max_rel_err": 1e-7, "conformant": True},
+    },
+    "backend_equiv": {
+        "resnet18": {"rel_err": 1e-6, "stats_equal": True, "agree": True},
+    },
+}
+
+
 def test_clean_record_passes():
     assert check_search(SEARCH, SEARCH, 2.0, 5000.0) == []
     assert check_sweep(SWEEP, SWEEP, 2.0, 5000.0) == []
+    assert check_kernels(KERNELS, KERNELS, 2.0, 5000.0) == []
+
+
+def test_kernel_conformance_flips_fail():
+    """A kernel drifting out of tolerance or an engine backend divergence
+    is a correctness failure regardless of timing."""
+    cur = copy.deepcopy(KERNELS)
+    cur["kernels"]["conv3x3_s1"]["conformant"] = False
+    assert any("no longer conformant" in b
+               for b in check_kernels(cur, KERNELS, 2.0, 5000.0))
+    cur2 = copy.deepcopy(KERNELS)
+    cur2["backend_equiv"]["resnet18"]["agree"] = False
+    assert any("diverged" in b
+               for b in check_kernels(cur2, KERNELS, 2.0, 5000.0))
+    cur3 = copy.deepcopy(KERNELS)
+    cur3["backend_equiv"]["resnet18"]["stats_equal"] = False
+    assert any("backend-independent" in b
+               for b in check_kernels(cur3, KERNELS, 2.0, 5000.0))
+    cur4 = copy.deepcopy(KERNELS)
+    del cur4["kernels"]["conv3x3_s1"]
+    del cur4["backend_equiv"]["resnet18"]
+    bad = check_kernels(cur4, KERNELS, 2.0, 5000.0)
+    assert len(bad) == 2 and all("missing" in b for b in bad)
+
+
+def test_kernel_time_regression_fails_and_noise_floor_exempts():
+    doctored = copy.deepcopy(KERNELS)
+    doctored["kernels"]["conv3x3_s1"]["pallas_us"] = 4000.0
+    bad = check_kernels(KERNELS, doctored, 2.0, 1000.0)
+    assert len(bad) == 1 and "2x baseline" in bad[0]
+    assert check_kernels(KERNELS, doctored, 2.0, 5000.0) == []
 
 
 def test_search_time_regression_fails():
@@ -126,9 +170,10 @@ def test_cli_end_to_end(tmp_path):
 
 
 def test_committed_baselines_pass_against_themselves():
-    for kind in ("search", "sweep"):
+    checkers = {"search": check_search, "sweep": check_sweep,
+                "kernels": check_kernels}
+    for kind, checker in checkers.items():
         path = os.path.join(_BASE, f"BENCH_{kind}.json")
         with open(path) as f:
             rec = json.load(f)
-        checker = check_search if kind == "search" else check_sweep
         assert checker(rec, rec, 2.0, 5000.0) == []

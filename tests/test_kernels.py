@@ -1,9 +1,12 @@
 """Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
 
 Shape/dtype sweeps per kernel as required: flash attention over sequence
-lengths, head dims, GQA ratios, masks and dtypes; conv2d over kernel sizes,
-channel counts and paddings.  The in-model jnp flash (custom_vjp) is also
-checked against the naive oracle including gradients.
+lengths, head dims, GQA ratios, masks, dtypes and block shapes — including
+a direct ``flash_attention_bh`` comparison against an inline jnp softmax
+reference (independent of ``ref.attention_ref``); conv2d over kernel
+sizes, strides, channel counts and paddings, plus the degenerate-geometry
+fallback regressions.  The in-model jnp flash (custom_vjp) is also checked
+against the naive oracle including gradients.
 """
 import math
 
@@ -11,8 +14,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels.ops import conv2d, flash_attention
-from repro.kernels.ref import attention_ref, conv2d_ref
+from repro.kernels.flash_attention import flash_attention_bh
+from repro.kernels.ops import conv2d, dwconv2d, flash_attention
+from repro.kernels.ref import attention_ref, conv2d_ref, dwconv2d_ref
 
 
 @pytest.mark.parametrize("B,H,KV,S,hd", [
@@ -74,14 +78,107 @@ def test_conv2d_sweep(H, W, cin, cout, K, p):
     assert jnp.max(jnp.abs(out - ref)) < 1e-4
 
 
-def test_conv2d_strided_fallback():
-    x = jax.random.normal(jax.random.PRNGKey(0), (16, 16, 8))
-    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 8)) * 0.1
-    out = conv2d(x, w, padding=1, stride=2)
-    ref = jax.lax.conv_general_dilated(
-        x[None], w, (2, 2), [(1, 1), (1, 1)],
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+@pytest.mark.parametrize("H,W,cin,cout,K,s,p", [
+    (16, 16, 8, 8, 3, 2, 1),     # resnet/mobilenet downsampling
+    (23, 23, 3, 16, 7, 2, 3),    # resnet stem
+    (15, 17, 4, 4, 1, 2, 0),     # strided pointwise (projection skip)
+    (14, 14, 6, 5, 5, 2, 2),
+])
+def test_conv2d_strided(H, W, cin, cout, K, s, p):
+    """Strided convs now run the Pallas shard kernel, not the XLA
+    fallback."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (H, W, cin))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, K, cin, cout)) * 0.1
+    out = conv2d(x, w, padding=p, stride=s)
+    ref = conv2d_ref(x, w, padding=p, stride=s)
+    assert out.shape == ref.shape
     assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+@pytest.mark.parametrize("H,W,c,K,s,p", [
+    (16, 16, 8, 3, 1, 1),
+    (15, 17, 6, 3, 2, 1),        # mobilenet strided depthwise
+    (9, 9, 4, 5, 1, 2),
+])
+def test_dwconv2d_sweep(H, W, c, K, s, p):
+    x = jax.random.normal(jax.random.PRNGKey(0), (H, W, c))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, K, 1, c)) * 0.3
+    out = dwconv2d(x, w, padding=p, stride=s)
+    ref = dwconv2d_ref(x, w, padding=p, stride=s)
+    assert out.shape == ref.shape
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+@pytest.mark.parametrize("shape,K,p,case", [
+    ((8, 2, 4), 3, 0, "out_w==0"),       # W < K: zero-width output
+    ((2, 8, 4), 3, 0, "out_h==0"),       # H < K: zero-height output
+    ((6, 6, 4), 3, 0, "tile_h>out_h"),   # one short tile
+    ((3, 3, 4), 3, 0, "1x1 output"),
+])
+def test_conv2d_degenerate_geometries(shape, K, p, case):
+    """Regression (satellite): tile_h > out_h and empty outputs fall back
+    cleanly to the XLA result instead of raising shape errors."""
+    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, K, shape[2], 4)) * 0.1
+    out = conv2d(x, w, padding=p, tile_h=8)
+    ref = conv2d_ref(x, w, padding=p)
+    assert out.shape == ref.shape, case
+    if ref.size:
+        assert jnp.max(jnp.abs(out - ref)) < 1e-4, case
+
+
+def _softmax_attention_inline(q, k, v, *, causal, window, scale):
+    """Inline jnp softmax reference (independent of ref.attention_ref):
+    q/k/v [BH, S, hd] — the kernel's own layout."""
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).swapaxes(-1, -2)
+         ) * scale
+    S = q.shape[1]
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("BH,S,hd,bq,bk", [
+    (4, 256, 64, 128, 128),
+    (2, 256, 32, 64, 128),       # block_q != block_k
+    (2, 384, 64, 128, 64),
+    (1, 128, 128, 32, 32),       # many small blocks
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 48),
+                                           (False, None), (False, 96)])
+def test_flash_attention_bh_conformance(BH, S, hd, bq, bk, causal, window):
+    """Direct kernel entry point vs the inline softmax reference — covers
+    the causal upper-bound and sliding-window lower-bound block skips on
+    every block-shape combination."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (BH, S, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (BH, S, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (BH, S, hd))
+    out = flash_attention_bh(q, k, v, causal=causal, window=window,
+                             block_q=bq, block_k=bk)
+    ref = _softmax_attention_inline(q, k, v, causal=causal, window=window,
+                                    scale=1.0 / math.sqrt(hd))
+    assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+
+@pytest.mark.parametrize("S", [100, 130, 257])
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 32)])
+def test_flash_attention_nonmultiple_seq(S, bq, bk):
+    """Sequence lengths off every block multiple exercise the wrapper's
+    padding path; padded keys must not leak into real rows."""
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 2, S, 64))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 2, S, 64))
+    v = jax.random.normal(jax.random.PRNGKey(5), (1, 2, S, 64))
+    out = flash_attention(q, k, v, causal=True, window=40,
+                          block_q=bq, block_k=bk)
+    ref = attention_ref(q, k, v, causal=True, window=40)
+    assert jnp.max(jnp.abs(out - ref)) < 2e-5
 
 
 def test_model_flash_custom_vjp_grads():
