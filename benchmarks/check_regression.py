@@ -20,6 +20,13 @@ Usage (what the CI jobs run)::
         --current BENCH_sweep.json
     python -m benchmarks.check_regression --kind kernels \
         --current BENCH_kernels.json
+    python -m benchmarks.check_regression --kind mesh \
+        --current BENCH_mesh.json
+
+``--kind mesh`` gates only the mesh-executor correctness flags
+(output equivalence, stats identity, stage-structure agreement with the
+simulator) — its timings are advisory on CPU (see ``noise_note`` in
+BENCH_mesh.json).
 
 ``--kind kernels`` additionally hard-fails on a flipped kernel
 ``conformant`` flag or a pallas/xla engine-equivalence (``agree`` /
@@ -172,8 +179,42 @@ def check_kernels(current: dict, baseline: dict, max_ratio: float,
     return bad
 
 
+def check_mesh(current: dict, baseline: dict, max_ratio: float,
+               min_us: float) -> List[str]:
+    """Mesh-executor gate: every boolean flag is hard — output
+    equivalence (``agree``), geometry-accounting identity
+    (``stats_equal``) and stage-structure agreement with the simulator
+    (``structure_match``).  Timing fields are deliberately NOT gated:
+    BENCH_mesh.json's ``noise_note`` documents why CPU host-platform
+    fake devices make every duration advisory."""
+    bad: List[str] = []
+    # the committed baseline is the full model set; the per-push CI job
+    # runs the smoke subset, so only the smoke models are required —
+    # any model that IS present gates on its flags
+    required = {"mobilenet", "resnet18"}
+    for model, rec in baseline.get("models", {}).items():
+        cur = current.get("models", {}).get(model)
+        if cur is None:
+            if model in required:
+                bad.append(f"mesh/{model}: missing from current record")
+            continue
+        if not cur.get("agree", False):
+            bad.append(f"mesh/{model}: mesh output diverged from the "
+                       f"single-process engine "
+                       f"(rel_err {cur.get('rel_err')})")
+        if not cur.get("stats_equal", False):
+            bad.append(f"mesh/{model}: ExecStats geometry accounting no "
+                       f"longer matches the single-process engine")
+        if not cur.get("structure_match", False):
+            bad.append(f"mesh/{model}: measured stage structure diverged "
+                       f"from simsched.build_stages "
+                       f"(missing {cur.get('missing')}, "
+                       f"extra {cur.get('extra')})")
+    return bad
+
+
 _CHECKERS = {"search": check_search, "sweep": check_sweep,
-             "kernels": check_kernels}
+             "kernels": check_kernels, "mesh": check_mesh}
 
 
 def main(argv: List[str] | None = None) -> int:

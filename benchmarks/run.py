@@ -13,7 +13,8 @@ def main(argv: list[str] | None = None) -> None:
 
     from . import (engine_comm, estimator_quality, fig2_microbench,
                    fig7_fig9_comparison, fig8_score, kernel_bench,
-                   roofline_table, search_time, sweep, tpu_ce)
+                   mesh_bench, roofline_table, search_time, sweep,
+                   tpu_ce)
     print("name,us_per_call,derived")
     fig2_microbench.run()
     fig7_fig9_comparison.run(4, "fig7")
@@ -27,6 +28,9 @@ def main(argv: list[str] | None = None) -> None:
     # Pallas-vs-XLA shard kernel timings + conformance flags (JSON via
     # benchmarks.kernel_bench --json)
     kernel_bench.run()
+    # mesh executor vs single-process engine, reduced model set (full set
+    # + JSON via benchmarks.mesh_bench --json; respawns with fake devices)
+    mesh_bench.run(smoke=True)
     # data-driven CE: small trace budget by default (full 330K via
     # benchmarks.estimator_quality --full)
     estimator_quality.run(n_samples=8_000, trees=40)

@@ -30,7 +30,7 @@ selection):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.dpp import Objective, PlanFrontier, pipeline_frontier
 from repro.core.graph import ModelGraph
@@ -60,13 +60,16 @@ class RefineStep:
 @dataclasses.dataclass(frozen=True)
 class RefineResult:
     plan: Plan
-    report: SimReport          # simulator report of the returned plan
+    report: Optional[SimReport]  # simulator report of the returned plan
+    #                              (None when occupancy came from real
+    #                               measurements instead of the simulator)
     steps: Tuple[RefineStep, ...]
     converged: bool            # True when a selection fixed point was hit
+    best_throughput_rps: float = 0.0
 
     @property
     def throughput_rps(self) -> float:
-        return self.report.throughput_rps
+        return self.best_throughput_rps
 
 
 def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
@@ -75,8 +78,9 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
                           schemes: Sequence[Scheme] = ALL_SCHEMES,
                           max_segment: int = 32,
                           allow_fusion: bool = True,
-                          frontier: Optional[PlanFrontier] = None
-                          ) -> RefineResult:
+                          frontier: Optional[PlanFrontier] = None,
+                          occupancy_fn: Optional[Callable[[Plan], object]]
+                          = None) -> RefineResult:
     """Throughput plan with simulator-calibrated resource weights.
 
     Returns the simulator-best plan over all iterates (never worse than
@@ -85,6 +89,16 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
     (build it with ``prune_ub=False`` if the scaled re-selection must be
     exact over the complete nondominated set; a pruned frontier still
     refines, just within the latency-optimum trust region).
+
+    ``occupancy_fn`` replaces the simulator as the occupancy source with
+    *real measurements*: called with each candidate plan, it must return
+    an object with ``dev_occupancy_s`` / ``link_occupancy_s`` /
+    ``period_s`` attributes — e.g. ``ExecStats.to_occupancy()`` from a
+    warm instrumented mesh-executor run
+    (``runtime.mesh_exec.run_partitioned_mesh(..., instrument=True)``).
+    The fixed-point loop is unchanged; only the measured-over-analytic
+    ratios now come from the machine instead of the model, and the
+    returned :class:`RefineResult` has ``report=None``.
     """
     est = ClusterAnalyticEstimator(cluster, weighted=weighted)
     fr = frontier if frontier is not None else pipeline_frontier(
@@ -106,22 +120,32 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
         a = float(fr.points[idx, 0])
         b = float(fr.points[idx, 1])
         plan = fr.plan(idx)
-        rep = simulate(graph, plan, cluster, n_requests=n_requests,
-                       weighted=weighted)
-        period = 1.0 / rep.throughput_rps
-        served = rep.n_requests
-        dev_occ = max(rep.device_busy_s) / served
-        link_occ = (max(rep.link_busy_s) / served
-                    if rep.link_busy_s else 0.0)
+        rep: Optional[SimReport] = None
+        if occupancy_fn is not None:
+            occ = occupancy_fn(plan)
+            period = float(occ.period_s)
+            rps = 1.0 / period if period > 0.0 else 0.0
+            dev_occ = float(occ.dev_occupancy_s)
+            link_occ = float(occ.link_occupancy_s)
+        else:
+            rep = simulate(graph, plan, cluster, n_requests=n_requests,
+                           weighted=weighted)
+            rps = rep.throughput_rps
+            period = 1.0 / rps
+            served = rep.n_requests
+            dev_occ = max(rep.device_busy_s) / served
+            link_occ = (max(rep.link_busy_s) / served
+                        if rep.link_busy_s else 0.0)
         steps.append(RefineStep(
             point_idx=idx, compute_s=a, sync_s=b, beta=beta, alpha=alpha,
-            sim_throughput_rps=rep.throughput_rps, sim_period_s=period,
+            sim_throughput_rps=rps, sim_period_s=period,
             dev_occupancy_s=dev_occ, link_occupancy_s=link_occ))
-        if best is None or rep.throughput_rps > best[0]:
-            best = (rep.throughput_rps, plan, rep)
+        if best is None or rps > best[0]:
+            best = (rps, plan, rep)
         # measured-over-analytic occupancy ratios become the axis weights
         beta = dev_occ / a if a > 0.0 else 1.0
         alpha = link_occ / b if b > 0.0 else 1.0
     assert best is not None
     return RefineResult(plan=best[1], report=best[2],
-                        steps=tuple(steps), converged=converged)
+                        steps=tuple(steps), converged=converged,
+                        best_throughput_rps=best[0])

@@ -23,6 +23,14 @@ raise :class:`UnsupportedGeometry`; callers (``ops.conv2d``, the engine's
 pallas backend) catch it and fall back to the XLA path.  Validated with
 ``interpret=True`` (this container is CPU-only); the grid/BlockSpec/scratch
 structure is the TPU deployment artifact.
+
+The kernel is executor-agnostic: the single-process engine hands it the
+host-sliced local input, and the mesh executor
+(``runtime.mesh_exec``) traces the *same* kernel inside per-device
+``shard_map`` programs where the halo-extended slice is assembled by
+collectives (``ppermute`` neighbor exchange / ``all_gather``) instead of
+host indexing — the shard layout contract above is what makes that
+drop-in.
 """
 from __future__ import annotations
 

@@ -49,6 +49,7 @@ from repro.kernels.ops import matmul_tiled
 Rect = Tuple[Tuple[int, int], Tuple[int, int], Tuple[int, int]]
 
 BACKENDS = ("xla", "pallas")
+EXECUTORS = ("local", "mesh")
 
 
 def _pallas_interpret() -> bool:
@@ -203,6 +204,34 @@ def _clip(r: Tuple[int, int], bound: int) -> Tuple[int, int]:
 # Plan execution
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class StageTime:
+    """Measured wall time of one dispatched pipeline stage (mesh executor,
+    ``instrument=True``).  ``device_done_s`` holds per-device completion
+    offsets of a compute stage's output shards, measured by blocking on
+    the shards in mesh order — on shared-core host platforms the values
+    are an upper envelope (a shard that finished before an earlier shard
+    in the blocking order reports that earlier shard's completion time)."""
+
+    kind: str                            # "compute" | "sync"
+    label: str                           # simsched stage label convention
+    wall_s: float
+    device_done_s: Tuple[float, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredOccupancy:
+    """Per-request resource-class occupancy measured from a real run —
+    the drop-in counterpart of the simulator occupancy that
+    ``cluster.refine`` extracts from a :class:`~repro.cluster.simsched.
+    SimReport` (``occupancy_fn`` protocol)."""
+
+    dev_occupancy_s: float     # max over devices of summed compute time
+    link_occupancy_s: float    # summed sync-stage wall time
+    period_s: float            # pipelined steady-state period estimate
+    latency_s: float           # single-request wall time
+
+
 @dataclasses.dataclass
 class ExecStats:
     sync_points: int = 0
@@ -213,6 +242,39 @@ class ExecStats:
     #: (pipeline metadata: serving reads it to align engine runs with
     #: ``cluster.simsched`` schedules)
     compute_stages: int = 0
+    #: measured pipeline stages (mesh executor with ``instrument=True``).
+    #: Excluded from equality: geometry accounting is executor- and
+    #: backend-independent by contract, wall times never are.
+    stage_times: List[StageTime] = dataclasses.field(
+        default_factory=list, compare=False, repr=False)
+    #: end-to-end wall seconds of the run (mesh executor only)
+    wall_s: float = dataclasses.field(default=0.0, compare=False)
+
+    def to_occupancy(self) -> MeasuredOccupancy:
+        """Fold the measured stage times into per-resource-class occupancy
+        for ``cluster.refine`` (replacing sim-only occupancy when real
+        measurements exist).  Device occupancy is the straggler device's
+        summed compute time; link occupancy sums the sync-stage walls; the
+        period is the busier class (the ``PipelineCost`` bottleneck
+        semantics applied to measurements)."""
+        if not self.stage_times:
+            raise ValueError("no measured stages — run the mesh executor "
+                             "with instrument=True")
+        per_dev: Dict[int, float] = {}
+        sync = 0.0
+        for st in self.stage_times:
+            if st.kind == "compute":
+                if st.device_done_s:
+                    for d, t in enumerate(st.device_done_s):
+                        per_dev[d] = per_dev.get(d, 0.0) + t
+                else:
+                    per_dev[0] = per_dev.get(0, 0.0) + st.wall_s
+            else:
+                sync += st.wall_s
+        dev = max(per_dev.values()) if per_dev else 0.0
+        return MeasuredOccupancy(
+            dev_occupancy_s=dev, link_occupancy_s=sync,
+            period_s=max(dev, sync), latency_s=self.wall_s)
 
 
 def _rect_elems(r: Rect) -> int:
@@ -235,6 +297,26 @@ def _rect_isect(a: Rect, b: Rect) -> Rect:
 # and planner sweeps — share one compiled executable; weights and the input
 # tensor are traced arguments, so reuse survives weight changes.
 # ---------------------------------------------------------------------------
+
+def backward_chain(layers: Sequence[LayerSpec], a: int, b: int,
+                   reg_b: Rect) -> Tuple[Dict[int, Rect], Rect]:
+    """Backward-chain the receptive field of output region ``reg_b`` of
+    layer ``b`` through segment ``[a..b]``: the per-layer needed output
+    regions (clipped to each layer's bounds) and the clipped input rect at
+    the segment entry.  Shared by the local executor, which slices the
+    rect from the host-resident full tensor, and the mesh executor, which
+    assembles it from collectives."""
+    need: Dict[int, Rect] = {b: reg_b}
+    rows, cols = reg_b[0], reg_b[1]
+    for li in range(b, a, -1):
+        rows = _clip(in_rows(layers[li], rows, 0), layers[li].in_h)
+        cols = _clip(in_rows(layers[li], cols, 1), layers[li].in_w)
+        need[li - 1] = (rows, cols, (0, layers[li - 1].out_c))
+    l_in = layers[a]
+    in_r = _clip(in_rows(l_in, need[a][0], 0), l_in.in_h)
+    in_c = _clip(in_rows(l_in, need[a][1], 1), l_in.in_w)
+    return need, (in_r, in_c, (0, l_in.in_c))
+
 
 #: per-layer static record: (conv_t, k, s, pads(pt,pb,pl,pr) | None,
 #: slices(r0,r1,c0,c1) | None, chans(c0,c1))
@@ -373,24 +455,14 @@ def _run_branch(layers: Sequence[LayerSpec],
     full = x
     for (a, b) in steps_segments(steps):
         scheme = steps[a][0]
-        l_in = layers[a]
         regs_b = exact_regions(layers[b], scheme, nodes)
         cell_out: List[Tuple[Rect, jnp.ndarray]] = []
         computed = 0
         for n, cells in enumerate(regs_b):
             for reg_b in cells:
                 # backward-chain the needed region through the segment
-                need: Dict[int, Rect] = {b: reg_b}
-                rows, cols = reg_b[0], reg_b[1]
-                for li in range(b, a, -1):
-                    rows = _clip(in_rows(layers[li], rows, 0),
-                                 layers[li].in_h)
-                    cols = _clip(in_rows(layers[li], cols, 1),
-                                 layers[li].in_w)
-                    need[li - 1] = (rows, cols, (0, layers[li - 1].out_c))
-                in_r = _clip(in_rows(l_in, need[a][0], 0), l_in.in_h)
-                in_c = _clip(in_rows(l_in, need[a][1], 1), l_in.in_w)
-                in_rect: Rect = (in_r, in_c, (0, l_in.in_c))
+                need, in_rect = backward_chain(layers, a, b, reg_b)
+                (in_r, in_c, _) = in_rect
                 # communication accounting: elems this node did not hold
                 if owned is not None:
                     held = sum(_rect_elems(_rect_isect(in_rect, o))
@@ -470,7 +542,11 @@ def _merge_comm_bytes(l: LayerSpec, prods: Sequence[int],
 def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
                     nodes: int,
                     jit_segments: bool = True,
-                    backend: str = "xla"
+                    backend: str = "xla",
+                    executor: str = "local",
+                    mesh=None,
+                    instrument: bool = False,
+                    overlap: bool = True
                     ) -> Tuple[jnp.ndarray, ExecStats]:
     """Execute ``plan`` on ``nodes`` simulated devices.  ``jit_segments``
     routes each segment cell through the compiled-program cache (repeated
@@ -478,9 +554,27 @@ def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
     historical eager path.  ``backend`` selects the segment-layer lowering:
     ``"xla"`` (generic ``conv_general_dilated``) or ``"pallas"`` (shard
     kernels with automatic per-record XLA fallback); stats accounting is
-    backend-independent by construction."""
+    backend-independent by construction.
+
+    ``executor="mesh"`` places each planned node's shard programs on its
+    own JAX device (``repro.runtime.mesh_exec``): halo rows arrive via
+    ``ppermute`` neighbor exchange, merge/scheme-change re-layouts via
+    ``all_gather`` — instead of host-side slicing.  ``mesh`` passes a
+    prebuilt 1-D ``nodes`` mesh (default: ``launch.mesh.make_nodes_mesh``);
+    ``instrument=True`` blocks per pipeline stage and records measured
+    ``StageTime`` rows into the stats; ``overlap=False`` keeps boundary
+    exchanges as their own dispatches (1:1 with the ``simsched`` stage
+    DAG) instead of fusing them into the consuming compute stage.
+    ``jit_segments`` is ignored by the mesh executor (always compiled)."""
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+    if executor not in EXECUTORS:
+        raise ValueError(f"executor {executor!r} not in {EXECUTORS}")
+    if executor == "mesh":
+        from repro.runtime.mesh_exec import run_partitioned_mesh
+        return run_partitioned_mesh(graph, weights, x, plan, nodes,
+                                    backend=backend, mesh=mesh,
+                                    instrument=instrument, overlap=overlap)
     stats = ExecStats()
     if graph.is_chain:
         plan.validate()

@@ -4,8 +4,8 @@ import copy
 import json
 import os
 
-from benchmarks.check_regression import (check_kernels, check_search,
-                                         check_sweep, main)
+from benchmarks.check_regression import (check_kernels, check_mesh,
+                                         check_search, check_sweep, main)
 
 _BASE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                      "baselines")
@@ -45,10 +45,56 @@ KERNELS = {
 }
 
 
+MESH = {
+    "nodes": 4,
+    "devices": 8,
+    "noise_note": "advisory",
+    "models": {
+        "mobilenet": {"rel_err": 0.0, "agree": True, "stats_equal": True,
+                      "structure_match": True, "missing": [], "extra": [],
+                      "local_us": 40000.0, "mesh_wall_us": 60000.0},
+        "resnet18": {"rel_err": 0.0, "agree": True, "stats_equal": True,
+                     "structure_match": True, "missing": [], "extra": [],
+                     "local_us": 50000.0, "mesh_wall_us": 70000.0},
+        "bert": {"rel_err": 0.0, "agree": True, "stats_equal": True,
+                 "structure_match": True, "missing": [], "extra": [],
+                 "local_us": 4000.0, "mesh_wall_us": 6000.0},
+    },
+}
+
+
 def test_clean_record_passes():
     assert check_search(SEARCH, SEARCH, 2.0, 5000.0) == []
     assert check_sweep(SWEEP, SWEEP, 2.0, 5000.0) == []
     assert check_kernels(KERNELS, KERNELS, 2.0, 5000.0) == []
+    assert check_mesh(MESH, MESH, 2.0, 5000.0) == []
+
+
+def test_mesh_flag_flips_fail():
+    """Mesh equivalence / stats / stage-structure flags are hard gates;
+    timings never gate (advisory on CPU)."""
+    for flag, needle in (("agree", "diverged from the single-process"),
+                         ("stats_equal", "geometry accounting"),
+                         ("structure_match", "stage structure")):
+        cur = copy.deepcopy(MESH)
+        cur["models"]["mobilenet"][flag] = False
+        bad = check_mesh(cur, MESH, 2.0, 5000.0)
+        assert len(bad) == 1 and needle in bad[0], (flag, bad)
+    # a 100x time blowup alone must NOT fail the gate
+    cur = copy.deepcopy(MESH)
+    cur["models"]["mobilenet"]["mesh_wall_us"] = 6e6
+    assert check_mesh(cur, MESH, 2.0, 5000.0) == []
+
+
+def test_mesh_smoke_subset_vs_full_baseline():
+    """The per-push job runs the smoke models against the full-set
+    baseline: optional models may be absent, the smoke set may not."""
+    cur = copy.deepcopy(MESH)
+    del cur["models"]["bert"]          # optional model: tolerated
+    assert check_mesh(cur, MESH, 2.0, 5000.0) == []
+    del cur["models"]["resnet18"]      # smoke model: required
+    bad = check_mesh(cur, MESH, 2.0, 5000.0)
+    assert len(bad) == 1 and "missing" in bad[0]
 
 
 def test_kernel_conformance_flips_fail():
@@ -171,7 +217,7 @@ def test_cli_end_to_end(tmp_path):
 
 def test_committed_baselines_pass_against_themselves():
     checkers = {"search": check_search, "sweep": check_sweep,
-                "kernels": check_kernels}
+                "kernels": check_kernels, "mesh": check_mesh}
     for kind, checker in checkers.items():
         path = os.path.join(_BASE, f"BENCH_{kind}.json")
         with open(path) as f:

@@ -1,0 +1,398 @@
+"""Mesh executor: multi-device `run_partitioned(..., executor="mesh")`.
+
+Two tiers, following the repo's multi-device convention
+(``test_multidevice.py``): the main test process keeps jax at 1 device,
+so everything that needs a real device mesh runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+In-process (1 device):
+  * degenerate 1-node plans bypass collectives — the mesh path must run
+    (and match the local executor bit-exactly) with a single device and
+    no mesh;
+  * argument validation, ``to_occupancy`` arithmetic and the
+    stage-decomposition validator as pure functions;
+  * ``refine_with_simulator(occupancy_fn=...)`` consumes measured
+    occupancy in place of the simulator.
+
+Subprocess (8 fake devices, ``slow``):
+  * equivalence vs the single-process path on every ``EDGE_MODELS`` entry
+    (chains and branched DAGs) at node counts 2/4/8 with searched plans,
+    scale-normalized tolerance as in PR 5, plus exact ``ExecStats``
+    geometry equality;
+  * ``backend="pallas"`` slots into the per-device programs unchanged;
+  * measured stage structure (``instrument=True, overlap=False``)
+    matches ``simsched.build_stages`` 1:1 and compute stages carry
+    per-device completion times;
+  * the overlapped (double-buffered) halo path on an NT plan matches;
+  * the refine loop closes against *measured* mesh occupancy.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.edge_models import EDGE_MODELS
+from repro.core import AnalyticEstimator, Testbed
+from repro.core.dpp import plan_search
+from repro.core.partition import Mode, Scheme
+from repro.core.plan import Plan
+from repro.runtime.engine import (EXECUTORS, ExecStats, MeasuredOccupancy,
+                                  StageTime, init_weights,
+                                  run_partitioned)
+from repro.runtime.mesh_exec import validate_stage_decomposition
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+EST = AnalyticEstimator()
+
+MODEL_TEST_KW = {
+    "mobilenet": dict(width=32),
+    "resnet18": dict(width=32),
+    "resnet101": dict(width=32),
+    "inception": dict(width=32),
+    "bert": dict(seq=16, d=32, n_layers=1, d_ff=64),
+}
+
+
+def _run(code: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=1200)
+
+
+def _model_io(name, seed=0):
+    g = EDGE_MODELS[name](**MODEL_TEST_KW[name])
+    w = init_weights(g, jax.random.PRNGKey(seed))
+    l0 = g.layers[0]
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (l0.in_h, l0.in_w, l0.in_c))
+    return g, w, x
+
+
+# ---------------------------------------------------------------------------
+# in-process: degenerate 1-node path + validation
+# ---------------------------------------------------------------------------
+
+def test_executors_constant():
+    assert EXECUTORS == ("local", "mesh")
+
+
+@pytest.mark.parametrize("name", ["mobilenet", "resnet18"])
+def test_one_node_plan_bypasses_collectives(name):
+    """nodes=1 must work in a 1-device process: no mesh is built and no
+    collective is traced — output and stats are bit-identical to the
+    local executor."""
+    g, w, x = _model_io(name)
+    plan = plan_search(g, EST, Testbed(nodes=1, bandwidth_gbps=0.5)).plan
+    ref, s_ref = run_partitioned(g, w, x, plan, nodes=1)
+    out, s = run_partitioned(g, w, x, plan, nodes=1, executor="mesh")
+    assert float(jnp.max(jnp.abs(out - ref))) == 0.0
+    assert s == s_ref
+
+
+def test_one_node_instrumented_stats():
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+    _, s = run_partitioned(g, w, x, plan, nodes=1, executor="mesh",
+                           instrument=True)
+    assert s.stage_times and s.wall_s > 0.0
+    kinds = {st.kind for st in s.stage_times}
+    assert kinds == {"compute", "sync"}
+    occ = s.to_occupancy()
+    assert occ.period_s == max(occ.dev_occupancy_s, occ.link_occupancy_s)
+    assert occ.latency_s >= 0.0
+
+
+def test_executor_validation():
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+    with pytest.raises(ValueError, match="executor"):
+        run_partitioned(g, w, x, plan, nodes=1, executor="bogus")
+    with pytest.raises(ValueError, match="backend"):
+        run_partitioned(g, w, x, plan, nodes=1, executor="mesh",
+                        backend="bogus")
+    with pytest.raises(ValueError, match="nodes"):
+        run_partitioned(g, w, x, plan, nodes=0, executor="mesh")
+
+
+def test_mesh_needs_devices():
+    """Asking for more nodes than devices raises the actionable
+    XLA_FLAGS hint (this process has 1 device)."""
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        run_partitioned(g, w, x, plan, nodes=4, executor="mesh")
+
+
+def test_to_occupancy_arithmetic():
+    s = ExecStats()
+    with pytest.raises(ValueError, match="instrument"):
+        s.to_occupancy()
+    s.stage_times = [
+        StageTime("compute", "seg[a..b]", 0.5, (0.2, 0.5)),
+        StageTime("compute", "seg[c..c]", 0.3, (0.3, 0.1)),
+        StageTime("sync", "bound@b", 0.05),
+        StageTime("sync", "gather", 0.1),
+    ]
+    s.wall_s = 0.95
+    occ = s.to_occupancy()
+    assert isinstance(occ, MeasuredOccupancy)
+    # per-device sums: dev0 = 0.5, dev1 = 0.6 -> straggler 0.6
+    assert occ.dev_occupancy_s == pytest.approx(0.6)
+    assert occ.link_occupancy_s == pytest.approx(0.15)
+    assert occ.period_s == pytest.approx(0.6)
+    assert occ.latency_s == pytest.approx(0.95)
+
+
+def test_validate_stage_decomposition_pure():
+    from repro.cluster.simsched import Stage
+
+    def sim(kind, label):
+        return Stage(kind, (1.0,), (), label)
+
+    stats = ExecStats()
+    stats.stage_times = [
+        StageTime("compute", "seg[a..b]", 0.1, (0.1,)),
+        StageTime("sync", "bound@b", 0.01),
+        StageTime("compute", "seg[c..d]", 0.2, (0.2,)),
+        StageTime("sync", "reshard", 0.0),
+        StageTime("sync", "gather", 0.02),
+    ]
+    stages = [sim("compute", "seg[a..b]"), sim("sync", "bound@b"),
+              sim("compute", "seg[c..d]"), sim("sync", "gather")]
+    v = validate_stage_decomposition(stats, stages)
+    assert v["structure_match"] and not v["missing"] and not v["extra"]
+    assert len(v["stages"]) == 4
+    assert all(r["measured_s"] is not None for r in v["stages"])
+    # a sim-only stage is missing; a measured-only stage is extra
+    v2 = validate_stage_decomposition(
+        stats, stages + [sim("sync", "fork->x")])
+    assert not v2["structure_match"]
+    assert v2["missing"] == [("sync", "fork->x")]
+    # post-merge bound@ subsumed by the measured merge-> gather
+    stats3 = ExecStats()
+    stats3.stage_times = [StageTime("sync", "merge->m", 0.01),
+                          StageTime("compute", "seg[m..m]", 0.1, (0.1,))]
+    stages3 = [sim("sync", "merge->m"), sim("compute", "seg[m..m]"),
+               sim("sync", "bound@m")]
+    v3 = validate_stage_decomposition(stats3, stages3)
+    assert v3["structure_match"]
+    assert v3["subsumed"] == [("sync", "bound@m")]
+
+
+def test_refine_accepts_measured_occupancy():
+    """occupancy_fn replaces the simulator as the occupancy source: the
+    fixed-point loop runs on measured numbers and report is None."""
+    from repro.cluster import homogeneous, refine_with_simulator
+
+    g = EDGE_MODELS["mobilenet"](**MODEL_TEST_KW["mobilenet"])
+    cl = homogeneous(2, bandwidth_gbps=1.0)
+    calls = []
+
+    def occupancy_fn(plan):
+        calls.append(plan)
+        return MeasuredOccupancy(dev_occupancy_s=2e-3,
+                                 link_occupancy_s=1e-3,
+                                 period_s=2e-3, latency_s=3e-3)
+
+    rr = refine_with_simulator(g, cl, max_iters=3,
+                               occupancy_fn=occupancy_fn)
+    assert calls and rr.report is None
+    assert rr.throughput_rps == pytest.approx(500.0)
+    assert all(s.dev_occupancy_s == pytest.approx(2e-3) for s in rr.steps)
+    # constant measurements -> constant reweighting -> fixed point
+    assert rr.converged
+
+
+# ---------------------------------------------------------------------------
+# subprocess: real 8-device mesh
+# ---------------------------------------------------------------------------
+
+_PRELUDE = """
+    import numpy as np, jax, jax.numpy as jnp
+    assert len(jax.devices()) == 8, jax.devices()
+    from repro.configs.edge_models import EDGE_MODELS
+    from repro.core import AnalyticEstimator, Testbed
+    from repro.core.dpp import plan_search
+    from repro.runtime.engine import run_partitioned, init_weights
+    EST = AnalyticEstimator()
+    KW = %r
+
+    def model_io(name, seed=0):
+        g = EDGE_MODELS[name](**KW[name])
+        w = init_weights(g, jax.random.PRNGKey(seed))
+        l0 = g.layers[0]
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                              (l0.in_h, l0.in_w, l0.in_c))
+        return g, w, x
+
+    def rel_err(a, b):
+        return float(jnp.max(jnp.abs(a - b)) / jnp.maximum(
+            1.0, jnp.max(jnp.abs(b))))
+""" % (MODEL_TEST_KW,)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("nodes", [2, 4, 8])
+def test_mesh_equivalence_all_models(nodes):
+    """Mesh vs single-process equivalence, searched plans, xla backend."""
+    r = _run(_PRELUDE + f"""
+    nodes = {nodes}
+    for name in KW:
+        g, w, x = model_io(name)
+        plan = plan_search(g, EST,
+                           Testbed(nodes=nodes, bandwidth_gbps=0.5)).plan
+        ref, s_ref = run_partitioned(g, w, x, plan, nodes=nodes)
+        out, s = run_partitioned(g, w, x, plan, nodes=nodes,
+                                 executor='mesh')
+        e = rel_err(out, ref)
+        assert e < 1e-4, (name, e)
+        assert s == s_ref, (name, s, s_ref)
+        print('EQ_OK', name)
+    print('ALL_EQ_OK')
+    """)
+    assert "ALL_EQ_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_mesh_equivalence_pallas():
+    """The Pallas shard kernels run unchanged inside the per-device
+    programs (the collective assembles the halo-extended slice the
+    kernel consumes)."""
+    r = _run(_PRELUDE + """
+    for name in ('mobilenet', 'resnet18', 'bert'):
+        g, w, x = model_io(name)
+        plan = plan_search(g, EST,
+                           Testbed(nodes=4, bandwidth_gbps=0.5)).plan
+        ref, s_ref = run_partitioned(g, w, x, plan, nodes=4,
+                                     backend='pallas')
+        out, s = run_partitioned(g, w, x, plan, nodes=4,
+                                 backend='pallas', executor='mesh')
+        e = rel_err(out, ref)
+        assert e < 1e-4, (name, e)
+        assert s == s_ref, (name,)
+        print('PALLAS_OK', name)
+    print('ALL_PALLAS_OK')
+    """)
+    assert "ALL_PALLAS_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_mesh_stage_structure_matches_simulator():
+    """instrument=True, overlap=False: the measured stage multiset equals
+    simsched.build_stages 1:1 and every multi-node compute stage carries
+    per-device completion times."""
+    r = _run(_PRELUDE + """
+    from repro.cluster import build_stages, homogeneous
+    from repro.runtime.mesh_exec import validate_stage_decomposition
+    cl = homogeneous(4, bandwidth_gbps=0.5)
+    for name in KW:
+        g, w, x = model_io(name)
+        plan = plan_search(g, EST,
+                           Testbed(nodes=4, bandwidth_gbps=0.5)).plan
+        out, s = run_partitioned(g, w, x, plan, nodes=4, executor='mesh',
+                                 instrument=True, overlap=False)
+        v = validate_stage_decomposition(s, build_stages(g, plan, cl))
+        assert v['structure_match'], (name, v['missing'], v['extra'])
+        n_dev = [len(st.device_done_s) for st in s.stage_times
+                 if st.kind == 'compute'
+                 and len(st.device_done_s) > 0]
+        assert n_dev and all(k == 4 for k in n_dev), (name, n_dev)
+        print('STRUCT_OK', name)
+    print('ALL_STRUCT_OK')
+    """)
+    assert "ALL_STRUCT_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_mesh_overlapped_halo_exchange():
+    """Same-scheme boundaries take the double-buffered ppermute path:
+    on a constant-resolution conv chain (every boundary is
+    permute-eligible) overlap=True fuses all exchanges into the
+    producing compute stages, overlap=False dispatches each as its own
+    sync stage.  On mobilenet at test scale the deep tail shrinks to
+    <1 row per node, so ineligible boundaries must *fall back* to the
+    gather path and still match."""
+    r = _run(_PRELUDE + """
+    from repro.core.graph import ConvT, LayerSpec, ModelGraph, chain
+    from repro.core.partition import Mode, Scheme
+    from repro.core.plan import Plan
+    # constant-resolution chain: 6x conv3x3 s1 p1 over 24x24 rows ->
+    # 6 rows/node at 4 nodes, 1-2 halo rows per 2-layer segment
+    convs = [LayerSpec(f'c{i}', ConvT.CONV, 24, 24, 8, 8, 3, 1, 1)
+             for i in range(6)]
+    g = chain('flatchain', convs)
+    w = init_weights(g, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (24, 24, 8))
+    steps = [(Scheme.INH, Mode.T if i % 2 == 1 else Mode.NT)
+             for i in range(len(g))]
+    plan = Plan(steps)
+    ref, s_ref = run_partitioned(g, w, x, plan, nodes=4)
+    for overlap in (True, False):
+        out, s = run_partitioned(g, w, x, plan, nodes=4, executor='mesh',
+                                 instrument=True, overlap=overlap)
+        e = rel_err(out, ref)
+        assert e < 1e-4, (overlap, e)
+        assert s == s_ref
+        syncs = [st.label for st in s.stage_times if st.kind == 'sync']
+        bounds = [l for l in syncs if l.startswith('bound@')]
+        if overlap:
+            # every exchange fused into the producing compute stage
+            assert not bounds, syncs
+        else:
+            assert bounds == ['bound@c1', 'bound@c3'], syncs
+    # mobilenet, T every 3rd layer: the high-res boundaries fuse, the
+    # deep ineligible ones fall back to gather (labelled bound@) —
+    # overlap=True must still strictly reduce the sync-stage count
+    g, w, x = model_io('mobilenet')
+    steps = [(Scheme.INH, Mode.T if (i % 3 == 2) else Mode.NT)
+             for i in range(len(g))]
+    steps[-1] = (Scheme.INH, Mode.T)
+    plan = Plan(steps)
+    ref, s_ref = run_partitioned(g, w, x, plan, nodes=4)
+    n_bounds = {}
+    for overlap in (True, False):
+        out, s = run_partitioned(g, w, x, plan, nodes=4, executor='mesh',
+                                 instrument=True, overlap=overlap)
+        assert rel_err(out, ref) < 1e-4
+        assert s == s_ref
+        n_bounds[overlap] = sum(
+            1 for st in s.stage_times
+            if st.kind == 'sync' and st.label.startswith('bound@'))
+    assert n_bounds[True] < n_bounds[False], n_bounds
+    print('OVERLAP_OK')
+    """)
+    assert "OVERLAP_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_refine_on_measured_mesh_occupancy():
+    """Close the planner loop against the machine: refine re-selects on
+    occupancy measured by warm instrumented mesh runs."""
+    r = _run(_PRELUDE + """
+    from repro.cluster import homogeneous, refine_with_simulator
+    g, w, x = model_io('mobilenet')
+    cl = homogeneous(2, bandwidth_gbps=1.0)
+
+    def occupancy_fn(plan):
+        run = lambda: run_partitioned(g, w, x, plan, nodes=2,
+                                      executor='mesh', instrument=True)
+        run()                       # warm-up: compile
+        _, s = run()
+        return s.to_occupancy()
+
+    rr = refine_with_simulator(g, cl, max_iters=2,
+                               occupancy_fn=occupancy_fn)
+    assert rr.report is None
+    assert rr.steps and rr.throughput_rps > 0.0
+    assert all(s.dev_occupancy_s > 0.0 for s in rr.steps)
+    print('REFINE_MEASURED_OK')
+    """)
+    assert "REFINE_MEASURED_OK" in r.stdout, r.stdout + r.stderr
