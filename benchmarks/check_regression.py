@@ -213,8 +213,40 @@ def check_mesh(current: dict, baseline: dict, max_ratio: float,
     return bad
 
 
+def check_churn(current: dict, baseline: dict, max_ratio: float,
+                min_us: float) -> List[str]:
+    """Elastic-replanning gate: the per-preset ``wins`` flags are hard —
+    incremental replanning must beat both the never-replan and the
+    replan-from-scratch baselines on mean time-to-recover AND goodput,
+    and must actually exercise its reuse paths.  ALL timings (planner
+    wall, recovery seconds) are advisory — a churn replay interleaves
+    wall-clock planner time with modeled serving time, so ratio checks
+    on shared CPU runners would be pure noise; the seeded win flags
+    alone carry the signal (see ``noise_note`` in BENCH_churn.json)."""
+    bad: List[str] = []
+    for pname, base_p in baseline.get("presets", {}).items():
+        cur_p = current.get("presets", {}).get(pname)
+        if cur_p is None:
+            bad.append(f"churn/{pname}: preset missing from current")
+            continue
+        for strat in base_p.get("aggregate", {}):
+            if strat not in cur_p.get("aggregate", {}):
+                bad.append(f"churn/{pname}/{strat}: aggregate missing "
+                           f"from current")
+        for flag in base_p.get("wins", {}):
+            val = cur_p.get("wins", {}).get(flag)
+            if val is None:
+                bad.append(f"churn/{pname}: win flag {flag!r} missing "
+                           f"from current")
+            elif not val:
+                bad.append(f"churn/{pname}: incremental replanning no "
+                           f"longer wins {flag!r}")
+    return bad
+
+
 _CHECKERS = {"search": check_search, "sweep": check_sweep,
-             "kernels": check_kernels, "mesh": check_mesh}
+             "kernels": check_kernels, "mesh": check_mesh,
+             "churn": check_churn}
 
 
 def main(argv: List[str] | None = None) -> int:

@@ -157,8 +157,21 @@ def run(json_path: str | None = None, smoke: bool = False) -> dict:
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (os.path.join(_ROOT, "src"),
                     env.get("PYTHONPATH", "")) if p)
-    r = subprocess.run(cmd, env=env, cwd=_ROOT, capture_output=True,
-                       text=True, timeout=3600)
+    try:
+        r = subprocess.run(cmd, env=env, cwd=_ROOT, capture_output=True,
+                           text=True, timeout=3600)
+    except subprocess.TimeoutExpired as exc:
+        raise RuntimeError(
+            "mesh_bench subprocess exceeded 3600s — on the CPU host "
+            "platform this is the known thread-pool starvation: all fake "
+            "devices share one dispatch pool, so threads parked in one "
+            "stage module's collective rendezvous can starve another "
+            "module's participants (XLA logs 'collective_ops_utils ... "
+            "may be stuck'). Reduce "
+            "XLA_FLAGS=--xla_force_host_platform_device_count, run with "
+            "--smoke, or arm run_partitioned_mesh(stage_timeout_s=...) "
+            "to fail the single wedged stage instead of the whole "
+            f"sweep.\npartial stdout: {exc.stdout!r}") from exc
     sys.stdout.write(r.stdout)
     sys.stderr.write(r.stderr)
     if r.returncode != 0:

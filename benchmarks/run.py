@@ -11,10 +11,10 @@ def main(argv: list[str] | None = None) -> None:
     from .common import json_arg
     json_path = json_arg(argv)
 
-    from . import (engine_comm, estimator_quality, fig2_microbench,
-                   fig7_fig9_comparison, fig8_score, kernel_bench,
-                   mesh_bench, roofline_table, search_time, sweep,
-                   tpu_ce)
+    from . import (churn_bench, engine_comm, estimator_quality,
+                   fig2_microbench, fig7_fig9_comparison, fig8_score,
+                   kernel_bench, mesh_bench, roofline_table, search_time,
+                   sweep, tpu_ce)
     print("name,us_per_call,derived")
     fig2_microbench.run()
     fig7_fig9_comparison.run(4, "fig7")
@@ -31,6 +31,9 @@ def main(argv: list[str] | None = None) -> None:
     # mesh executor vs single-process engine, reduced model set (full set
     # + JSON via benchmarks.mesh_bench --json; respawns with fake devices)
     mesh_bench.run(smoke=True)
+    # elastic-cluster churn replay: gated scenarios only (full scenario
+    # set + JSON via benchmarks.churn_bench --full --json)
+    churn_bench.run(smoke=True)
     # data-driven CE: small trace budget by default (full 330K via
     # benchmarks.estimator_quality --full)
     estimator_quality.run(n_samples=8_000, trees=40)

@@ -25,8 +25,16 @@ from repro.core.dpp import (Objective, PlanFrontier, SearchResult,
 from repro.core.graph import ModelGraph
 from repro.core.partition import ALL_SCHEMES, Scheme
 
+from .churn import (CHURN_SCENARIOS, STRATEGIES, ChurnEvent, ChurnRunResult,
+                    ChurnScenario, compare_strategies, random_scenario,
+                    run_churn)
+from .elastic import (CapacityError, DeviceRegistry, DeviceState,
+                      ElasticPlanner, Member, MembershipError, MigrationCost,
+                      ReplanDecision, migration_cost_s, plan_device_bytes,
+                      plan_memory_ok)
 from .estimator import ClusterAnalyticEstimator
-from .refine import RefineResult, RefineStep, refine_with_simulator
+from .refine import (RefineOscillationError, RefineResult, RefineStep,
+                     refine_with_simulator)
 from .serving import (ServingPoint, choose_batch, max_goodput, serve_point,
                       sweep_serving)
 from .simsched import SimReport, Stage, build_stages, simulate
@@ -75,11 +83,18 @@ def cluster_pipeline_frontier(graph: ModelGraph, cluster: ClusterSpec,
 
 
 __all__ = [
-    "CLUSTER_PRESETS", "ClusterAnalyticEstimator", "ClusterSpec",
-    "DeviceSpec", "LinkSpec", "Objective", "PlanFrontier", "RefineResult",
-    "RefineStep", "ServingPoint", "SimReport", "Stage", "asym_uplink",
-    "build_stages", "choose_batch", "cluster_pipeline_frontier",
-    "cluster_plan_search", "homogeneous", "max_goodput", "mixed_fast_slow",
-    "refine_with_simulator", "serve_point", "simulate", "stepped",
-    "sweep_serving", "topology_edges",
+    "CHURN_SCENARIOS", "CLUSTER_PRESETS", "CapacityError",
+    "ChurnEvent", "ChurnRunResult", "ChurnScenario",
+    "ClusterAnalyticEstimator", "ClusterSpec", "DeviceRegistry",
+    "DeviceSpec", "DeviceState", "ElasticPlanner", "LinkSpec", "Member",
+    "MembershipError", "MigrationCost", "Objective", "PlanFrontier",
+    "RefineOscillationError", "RefineResult", "RefineStep",
+    "ReplanDecision", "STRATEGIES", "ServingPoint", "SimReport", "Stage",
+    "asym_uplink", "build_stages", "choose_batch",
+    "cluster_pipeline_frontier", "cluster_plan_search",
+    "compare_strategies", "homogeneous", "max_goodput",
+    "migration_cost_s", "mixed_fast_slow", "plan_device_bytes",
+    "plan_memory_ok", "random_scenario", "refine_with_simulator",
+    "run_churn", "serve_point", "simulate", "stepped", "sweep_serving",
+    "topology_edges",
 ]

@@ -42,6 +42,14 @@ from .simsched import SimReport, simulate
 from .spec import ClusterSpec
 
 
+class RefineOscillationError(RuntimeError):
+    """The scaled re-selection entered a cycle (A -> B -> A -> ...)
+    without reaching a fixed point: the measured occupancy ratios
+    disagree with the analytic axes in a way no single ``(beta, alpha)``
+    reweighting resolves.  Raised only under ``on_oscillation="raise"``;
+    the default ``"best"`` accepts the simulator-best iterate instead."""
+
+
 @dataclasses.dataclass(frozen=True)
 class RefineStep:
     """One iterate: the frontier point tried and what the simulator saw."""
@@ -80,7 +88,9 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
                           allow_fusion: bool = True,
                           frontier: Optional[PlanFrontier] = None,
                           occupancy_fn: Optional[Callable[[Plan], object]]
-                          = None) -> RefineResult:
+                          = None,
+                          rel_tol: Optional[float] = None,
+                          on_oscillation: str = "best") -> RefineResult:
     """Throughput plan with simulator-calibrated resource weights.
 
     Returns the simulator-best plan over all iterates (never worse than
@@ -99,7 +109,29 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
     The fixed-point loop is unchanged; only the measured-over-analytic
     ratios now come from the machine instead of the model, and the
     returned :class:`RefineResult` has ``report=None``.
+
+    Termination: the loop runs at most ``max_iters`` simulations and
+    stops early at a selection fixed point (``converged=True``), a
+    selection cycle, or — with ``rel_tol`` set — as soon as the measured
+    period moves by less than ``rel_tol`` relative to the previous
+    iterate (near-stationary measurements on noisy occupancy sources
+    would otherwise never repeat a selection exactly).
+    ``on_oscillation="raise"`` turns a detected cycle into
+    :class:`RefineOscillationError` instead of silently returning the
+    simulator-best iterate.
+
+    Fault awareness: an ``occupancy_fn`` result with a nonzero
+    ``failures`` attribute (``ExecStats.to_occupancy()`` sets it from the
+    run's retry/timeout/fallback counters) is an *untrusted sample* — the
+    step is recorded but the axis weights keep their previous values, so
+    one faulty measurement cannot steer the selection, and a repeat
+    selection off a faulty sample is not certified as ``converged``.
     """
+    if on_oscillation not in ("best", "raise"):
+        raise ValueError(f"on_oscillation {on_oscillation!r} not in "
+                         f"('best', 'raise')")
+    if rel_tol is not None and rel_tol < 0.0:
+        raise ValueError(f"rel_tol must be >= 0, got {rel_tol}")
     est = ClusterAnalyticEstimator(cluster, weighted=weighted)
     fr = frontier if frontier is not None else pipeline_frontier(
         graph, est, cluster.compat_testbed(), schemes, max_segment,
@@ -110,23 +142,35 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
     steps: List[RefineStep] = []
     best: Optional[Tuple[float, Plan, SimReport]] = None
     converged = False
+    last_failed = False
     for _ in range(max_iters):
         idx = fr.select(Objective.THROUGHPUT, compute_scale=beta,
                         sync_scale=alpha)
         if idx in seen:
-            converged = len(steps) > 0 and idx == steps[-1].point_idx
+            fixed_point = len(steps) > 0 and idx == steps[-1].point_idx
+            converged = fixed_point and not last_failed
+            if not fixed_point and on_oscillation == "raise":
+                cycle = [s.point_idx for s in steps] + [idx]
+                raise RefineOscillationError(
+                    f"refinement cycles over frontier points {cycle} "
+                    f"without reaching a fixed point; pass "
+                    f"on_oscillation='best' to accept the "
+                    f"simulator-best iterate, or set rel_tol to accept "
+                    f"near-stationary measurements as converged")
             break
         seen.add(idx)
         a = float(fr.points[idx, 0])
         b = float(fr.points[idx, 1])
         plan = fr.plan(idx)
         rep: Optional[SimReport] = None
+        failed = False
         if occupancy_fn is not None:
             occ = occupancy_fn(plan)
             period = float(occ.period_s)
             rps = 1.0 / period if period > 0.0 else 0.0
             dev_occ = float(occ.dev_occupancy_s)
             link_occ = float(occ.link_occupancy_s)
+            failed = getattr(occ, "failures", 0) > 0
         else:
             rep = simulate(graph, plan, cluster, n_requests=n_requests,
                            weighted=weighted)
@@ -140,8 +184,19 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
             point_idx=idx, compute_s=a, sync_s=b, beta=beta, alpha=alpha,
             sim_throughput_rps=rps, sim_period_s=period,
             dev_occupancy_s=dev_occ, link_occupancy_s=link_occ))
-        if best is None or rps > best[0]:
+        # an untrusted sample may only seed best (the assert below needs
+        # one iterate) — it never displaces a trusted one
+        if best is None or (not failed and rps > best[0]):
             best = (rps, plan, rep)
+        if failed:
+            last_failed = True
+            continue      # keep previous axis weights
+        last_failed = False
+        if rel_tol is not None and len(steps) >= 2:
+            prev = steps[-2].sim_period_s
+            if abs(period - prev) <= rel_tol * max(prev, 1e-30):
+                converged = True
+                break
         # measured-over-analytic occupancy ratios become the axis weights
         beta = dev_occ / a if a > 0.0 else 1.0
         alpha = link_occ / b if b > 0.0 else 1.0

@@ -121,15 +121,37 @@ class CostTableBuilder:
     def s_entries(self) -> int:
         return len(self._s_rows)
 
-    def evaluate(self) -> Tuple[np.ndarray, np.ndarray]:
-        """Resolve every registered query in two batched estimator calls."""
-        ivals = (self._est.i_cost_batch(
-            np.asarray(self._i_rows, np.float64), self._tb,
-            np.asarray(self._i_factors, np.float64))
-            if self._i_rows else np.empty(0))
-        svals = (self._est.s_cost_batch(
-            np.asarray(self._s_rows, np.float64), self._tb)
-            if self._s_rows else np.empty(0))
+    def evaluate(self, est: Optional[CostEstimator] = None,
+                 ivals: Optional[np.ndarray] = None,
+                 svals: Optional[np.ndarray] = None
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Resolve every registered query in two batched estimator calls.
+
+        ``est`` re-evaluates the *same registered rows* under a different
+        estimator — the incremental-replanning hook: registration (the
+        Python-heavy enumeration/dedup phase) depends only on graph
+        geometry and the testbed projection, so a capability change that
+        leaves ``cluster.compat_testbed()`` intact reuses it wholesale.
+        ``ivals`` / ``svals`` skip re-evaluating that side entirely and
+        return the passed array (row-level invalidation: a derate report
+        dirties only the i-rows — s-costs read the testbed projection
+        only — while a link slowdown dirties only the s-rows)."""
+        est = self._est if est is None else est
+        if ivals is None:
+            ivals = (est.i_cost_batch(
+                np.asarray(self._i_rows, np.float64), self._tb,
+                np.asarray(self._i_factors, np.float64))
+                if self._i_rows else np.empty(0))
+        elif len(ivals) != len(self._i_rows):
+            raise ValueError(f"cached ivals cover {len(ivals)} rows, "
+                             f"builder has {len(self._i_rows)}")
+        if svals is None:
+            svals = (est.s_cost_batch(
+                np.asarray(self._s_rows, np.float64), self._tb)
+                if self._s_rows else np.empty(0))
+        elif len(svals) != len(self._s_rows):
+            raise ValueError(f"cached svals cover {len(svals)} rows, "
+                             f"builder has {len(self._s_rows)}")
         return np.asarray(ivals, np.float64), np.asarray(svals, np.float64)
 
 

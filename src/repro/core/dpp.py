@@ -809,15 +809,27 @@ class _FSet:
 
 
 def _chain_frontier(n: int, k: int, seg_options, bound, final,
-                    ub: float, stats: SearchStats):
+                    ub: float, stats: SearchStats,
+                    warm: Optional[Tuple[int, list]] = None):
     """Reverse Pareto DP over one full chain (final gather included).
 
     ``F[i][pi]`` holds the nondominated (compute, sync) suffix pairs from
     layer ``i`` given segment scheme ``schemes[pi]``; back-pointers are
     ``(segment_end, next_scheme_or_-1, next_point)``.
+
+    ``warm=(start, F_prev)`` warm-starts from surviving suffix frontiers:
+    the caller has verified that every table row reachable from layers
+    ``>= start`` is unchanged since ``F_prev`` was computed (segment costs,
+    boundary syncs and the final gather), so those suffix sets are reused
+    verbatim and the reverse DP only recomputes layers ``< start``.
+    ``stats.states`` counts recomputed states only.
     """
+    start = n if warm is None else warm[0]
     F: List[List[Optional[_FSet]]] = [[None] * k for _ in range(n)]
-    for i in range(n - 1, -1, -1):
+    if warm is not None:
+        for i in range(start, n):
+            F[i] = list(warm[1][i])
+    for i in range(min(start, n) - 1, -1, -1):
         for pi in range(k):
             As: List[np.ndarray] = []
             Bs: List[np.ndarray] = []
@@ -1176,6 +1188,234 @@ class PlanFrontier:
                             pipeline=PipelineCost(a, b))
 
 
+@dataclasses.dataclass
+class FrontierTables:
+    """Reusable registration artifacts of one ``pipeline_frontier`` problem.
+
+    Splits the batched frontier build into its three phases so incremental
+    replanning (``cluster.elastic``) can redo only what a cluster event
+    invalidated:
+
+    1. **register** — enumerate/dedup every admissible segment, boundary
+       and junction query (the Python-heavy phase).  Depends only on graph
+       geometry and the testbed projection, so any capability change that
+       leaves ``cluster.compat_testbed()`` intact reuses it wholesale.
+    2. **evaluate** — resolve the registered rows in one
+       ``i_cost_batch``/``s_cost_batch`` pair.  ``est`` swaps the
+       estimator (same rows, new capabilities); ``ivals``/``svals`` reuse
+       a cached side verbatim (a derate dirties only i-rows, a link change
+       only s-rows).
+    3. **frontier** — assemble tables and run the Pareto DP.  Consecutive
+       calls on one instance warm-start from the previous build: chain
+       suffix frontiers whose reachable table rows are value-identical are
+       reused (``_chain_frontier(warm=...)``); on DAGs, per-unique-branch
+       pinned Pareto tables are reused when that branch's seg/bound rows
+       are unchanged.  ``last_reuse`` reports what fired.
+
+    ``pipeline_frontier`` routes every batched build through a fresh
+    instance, so the one-shot path and the incremental path are the same
+    code — a warm rebuild is bit-identical to a scratch build by
+    construction (the reused suffix sets are recomputed-value-equal).
+    """
+
+    graph: ModelGraph
+    tb: Testbed
+    schemes: Tuple[Scheme, ...]
+    max_segment: int
+    allow_fusion: bool
+    builder: CostTableBuilder
+    _chain_fin: Optional[Callable] = None
+    _branches: Optional[list] = None
+    _bkeys: Optional[list] = None
+    _uniq: Optional[Dict] = None
+    _finalizers: Optional[list] = None
+    _jidx: Optional[Dict] = None
+    #: what the most recent :meth:`frontier` call reused from the previous
+    #: build on this instance (empty before the first build)
+    last_reuse: Dict = dataclasses.field(default_factory=dict)
+    _last: Optional[Dict] = dataclasses.field(default=None, repr=False)
+
+    @classmethod
+    def register(cls, graph: ModelGraph, est: CostEstimator, tb: Testbed,
+                 schemes: Sequence[Scheme] = ALL_SCHEMES,
+                 max_segment: int = 32,
+                 allow_fusion: bool = True) -> "FrontierTables":
+        """Phase 1: build the query registration for ``graph`` on ``tb``.
+        ``est`` must implement the batched protocol; it is only stored as
+        the default evaluator (registration never calls it)."""
+        if not hasattr(est, "i_cost_batch"):
+            raise TypeError("FrontierTables requires the batched estimator "
+                            "protocol (est.i_cost_batch)")
+        schemes_t = tuple(schemes)
+        builder = CostTableBuilder(est, tb)
+        if graph.is_chain:
+            fin = plan_chain_tables(graph.layers, builder, schemes_t,
+                                    max_segment, allow_fusion, tb.nodes,
+                                    with_final=True)
+            return cls(graph, tb, schemes_t, max_segment, allow_fusion,
+                       builder, _chain_fin=fin)
+        layers = graph.layers
+        branches = graph.linearize()
+        bkeys = [tuple(builder.layer_key(layers[i]) for i in br.ids)
+                 for br in branches]
+        uniq: Dict[tuple, int] = {}
+        finalizers: List[Callable] = []
+        for t, bkey in enumerate(bkeys):
+            if bkey not in uniq:
+                uniq[bkey] = len(finalizers)
+                ls = [layers[i] for i in branches[t].ids]
+                finalizers.append(plan_chain_tables(
+                    ls, builder, schemes_t, max_segment, allow_fusion,
+                    tb.nodes, with_final=False))
+        jidx: Dict[Tuple[int, Optional[int], int, Optional[int]], int] = {}
+        for br in branches:
+            tail = br.ids[-1]
+            consumers = graph.consumer_ids[tail]
+            if not consumers:
+                for pi, p in enumerate(schemes_t):
+                    jidx[(tail, None, pi, None)] = builder.s_index(
+                        layers[tail], None, p, None)
+            for c in consumers:
+                for pi, p in enumerate(schemes_t):
+                    for qi, q in enumerate(schemes_t):
+                        jidx[(tail, c, pi, qi)] = builder.s_index(
+                            layers[tail], layers[c], p, q)
+        return cls(graph, tb, schemes_t, max_segment, allow_fusion, builder,
+                   _branches=branches, _bkeys=bkeys, _uniq=uniq,
+                   _finalizers=finalizers, _jidx=jidx)
+
+    def evaluate(self, est: Optional[CostEstimator] = None,
+                 ivals: Optional[np.ndarray] = None,
+                 svals: Optional[np.ndarray] = None
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Phase 2: resolve the registered rows (see
+        :meth:`CostTableBuilder.evaluate` for the reuse semantics)."""
+        return self.builder.evaluate(est=est, ivals=ivals, svals=svals)
+
+    # -- phase 3 ------------------------------------------------------------
+
+    def _chain_suffix_start(self, tbl) -> int:
+        """Deepest ``i0`` with every table row reachable from layers
+        ``>= i0`` unchanged vs. the previous build (suffix frontiers above
+        it survive verbatim); ``tbl.n`` when nothing survives."""
+        old = self._last["tbl"]
+        n = tbl.n
+        if not np.array_equal(tbl.s_final, old.s_final, equal_nan=True):
+            return n
+        i0 = n
+        while i0 > 0:
+            i = i0 - 1
+            if not np.array_equal(tbl.seg[i], old.seg[i]):
+                break
+            if i < n - 1 and not np.array_equal(tbl.sbound[i],
+                                                old.sbound[i]):
+                break
+            i0 = i
+        return i0
+
+    def frontier(self, ivals: np.ndarray, svals: np.ndarray,
+                 ub: float = _INF, warm: bool = True) -> PlanFrontier:
+        """Phase 3: assemble tables from the evaluated rows and run the
+        Pareto DP, warm-starting from the previous build on this instance
+        when ``warm`` (value-equal suffixes/branches only, so the result
+        is always bit-identical to a scratch build)."""
+        stats = SearchStats(i_calls=self.builder.i_entries,
+                            s_calls=self.builder.s_entries)
+        if self._chain_fin is not None:
+            return self._frontier_chain(ivals, svals, ub, warm, stats)
+        return self._frontier_dag(ivals, svals, ub, warm, stats)
+
+    def _frontier_chain(self, ivals, svals, ub, warm, stats):
+        schemes_t = self.schemes
+        n = len(self.graph)
+        k = len(schemes_t)
+        tbl = self._chain_fin(ivals, svals)
+        stats.pruned_halo = tbl.halo_cuts
+        warm_arg = None
+        reused = 0
+        if warm and self._last is not None and self._last["ub"] == ub:
+            i0 = self._chain_suffix_start(tbl)
+            if i0 < n:
+                warm_arg = (i0, self._last["F"])
+                reused = n - i0
+        F = _chain_frontier(n, k, tbl.seg_options, tbl.bound, tbl.final,
+                            ub, stats, warm=warm_arg)
+        self._last = {"tbl": tbl, "F": F, "ub": ub}
+        self.last_reuse = {"mode": "chain", "layers": n,
+                           "suffix_reused_layers": reused}
+        roots = []
+        As: List[float] = []
+        Bs: List[float] = []
+        for pi in range(k):
+            if F[0][pi] is None:
+                continue
+            fs = F[0][pi]
+            for j in range(len(fs.a)):
+                As.append(float(fs.a[j]))
+                Bs.append(float(fs.b[j]))
+                roots.append((pi, j))
+        if not roots:
+            raise RuntimeError(f"{self.graph.name}: no feasible plan found")
+        a = np.asarray(As)
+        b = np.asarray(Bs)
+        keep = pareto_front_2d(a, b, ub)
+        points = np.stack([a[keep], b[keep]], axis=1)
+        kept = [roots[int(j)] for j in keep]
+
+        def build(idx: int) -> Plan:
+            pi, j = kept[idx]
+            return _chain_plan_from(F, schemes_t, pi, j)
+
+        return PlanFrontier(schemes_t, points, stats, build)
+
+    def _frontier_dag(self, ivals, svals, ub, warm, stats):
+        graph = self.graph
+        schemes_t = self.schemes
+        branches = self._branches
+        bkeys, uniq, jidx = self._bkeys, self._uniq, self._jidx
+        utables = [fin(ivals, svals) for fin in self._finalizers]
+        stats.pruned_halo = sum(utables[u].halo_cuts for u in uniq.values())
+        ptab_memo: Dict[Tuple[int, bool], Dict] = {}
+        reused_branches = 0
+        if warm and self._last is not None and self._last["ub"] == ub:
+            prev_ut = self._last["utables"]
+            for u, tblu in enumerate(utables):
+                old = prev_ut[u]
+                # pinned per-branch tables read seg + internal bounds only
+                if np.array_equal(tblu.seg, old.seg) \
+                        and np.array_equal(tblu.sbound, old.sbound):
+                    for (uu, hs), v in self._last["ptab"].items():
+                        if uu == u:
+                            ptab_memo[(u, hs)] = v
+                    reused_branches += 1
+
+        def ptable(t: int, head_solo: bool):
+            u = uniq[bkeys[t]]
+            hit = ptab_memo.get((u, head_solo))
+            if hit is not None:
+                return hit
+            tblu = utables[u]
+
+            def seg_costs(i: int, pi: int):
+                return tblu.seg_options(i, pi, head_solo)
+
+            out = _pinned_pareto_tables(len(branches[t]), schemes_t,
+                                        seg_costs, tblu.bound, ub, stats)
+            ptab_memo[(u, head_solo)] = out
+            return out
+
+        def jscost(prod: int, cons: Optional[int], pi: int,
+                   qi: Optional[int]) -> float:
+            return float(svals[jidx[(prod, cons, pi, qi)]])
+
+        points, build = _dag_pipeline_frontier(graph, schemes_t, ptable,
+                                               jscost, ub, stats)
+        self._last = {"utables": utables, "ptab": ptab_memo, "ub": ub}
+        self.last_reuse = {"mode": "dag", "unique_branches": len(utables),
+                           "branch_tables_reused": reused_branches}
+        return PlanFrontier(schemes_t, points, stats, build)
+
+
 def pipeline_frontier(graph: ModelGraph, est: CostEstimator, tb: Testbed,
                       schemes: Sequence[Scheme] = ALL_SCHEMES,
                       max_segment: int = 32,
@@ -1208,44 +1448,37 @@ def pipeline_frontier(graph: ModelGraph, est: CostEstimator, tb: Testbed,
             ub_cost = plan_search(graph, est, tb, schemes_t, max_segment,
                                   allow_fusion).cost
         ub = ub_cost * (1.0 + 1e-12)
-    batched = hasattr(est, "i_cost_batch")
+    if hasattr(est, "i_cost_batch"):
+        # batched estimators route through the registration/evaluation/DP
+        # split (one fresh instance here; cluster.elastic holds onto one
+        # across cluster events for incremental rebuilds)
+        ft = FrontierTables.register(graph, est, tb, schemes_t, max_segment,
+                                     allow_fusion)
+        return ft.frontier(*ft.evaluate(), ub=ub)
 
     if graph.is_chain:
         n = len(graph)
-        if batched:
-            builder = CostTableBuilder(est, tb)
-            fin = plan_chain_tables(graph.layers, builder, schemes_t,
-                                    max_segment, allow_fusion, tb.nodes,
-                                    with_final=True)
-            tbl = fin(*builder.evaluate())
-            stats.i_calls = builder.i_entries
-            stats.s_calls = builder.s_entries
-            stats.pruned_halo = tbl.halo_cuts
-            seg_options = tbl.seg_options
-            bound = tbl.bound
-            final = tbl.final
-        else:
-            ls = list(graph.layers)
+        ls = list(graph.layers)
 
-            def icost(l, p, halo=0):
-                stats.i_calls += 1
-                return est.i_cost(l, p, tb, extra_halo=halo)
+        def icost(l, p, halo=0):
+            stats.i_calls += 1
+            return est.i_cost(l, p, tb, extra_halo=halo)
 
-            def scost(l, nxt, s, d):
-                stats.s_calls += 1
-                return est.s_cost(l, nxt, s, d, tb)
+        def scost(l, nxt, s, d):
+            stats.s_calls += 1
+            return est.s_cost(l, nxt, s, d, tb)
 
-            seg_options, bound = _scalar_chain_providers(
-                ls, icost, scost, schemes_t, max_segment, allow_fusion,
-                False, tb.nodes, stats)
-            fin_cache: Dict[int, float] = {}
+        seg_options, bound = _scalar_chain_providers(
+            ls, icost, scost, schemes_t, max_segment, allow_fusion,
+            False, tb.nodes, stats)
+        fin_cache: Dict[int, float] = {}
 
-            def final(pi: int) -> float:
-                hit = fin_cache.get(pi)
-                if hit is None:
-                    hit = scost(ls[-1], None, schemes_t[pi], None)
-                    fin_cache[pi] = hit
-                return hit
+        def final(pi: int) -> float:
+            hit = fin_cache.get(pi)
+            if hit is None:
+                hit = scost(ls[-1], None, schemes_t[pi], None)
+                fin_cache[pi] = hit
+            return hit
 
         F = _chain_frontier(n, k, seg_options, bound, final, ub, stats)
         roots = []
@@ -1272,91 +1505,39 @@ def pipeline_frontier(graph: ModelGraph, est: CostEstimator, tb: Testbed,
 
         return PlanFrontier(schemes_t, points, stats, build)
 
-    # ---- DAG --------------------------------------------------------------
+    # ---- DAG (scalar-only estimators) -------------------------------------
     layers = graph.layers
     branches = graph.linearize()
-    if batched:
-        builder = CostTableBuilder(est, tb)
-        bkeys = [tuple(builder.layer_key(layers[i]) for i in br.ids)
-                 for br in branches]
-        uniq: Dict[tuple, int] = {}
-        finalizers = []
-        for t, bkey in enumerate(bkeys):
-            if bkey not in uniq:
-                uniq[bkey] = len(finalizers)
-                ls = [layers[i] for i in branches[t].ids]
-                finalizers.append(plan_chain_tables(
-                    ls, builder, schemes_t, max_segment, allow_fusion,
-                    tb.nodes, with_final=False))
-        jidx: Dict[Tuple[int, Optional[int], int, Optional[int]], int] = {}
-        for br in branches:
-            tail = br.ids[-1]
-            consumers = graph.consumer_ids[tail]
-            if not consumers:
-                for pi, p in enumerate(schemes_t):
-                    jidx[(tail, None, pi, None)] = builder.s_index(
-                        layers[tail], None, p, None)
-            for c in consumers:
-                for pi, p in enumerate(schemes_t):
-                    for qi, q in enumerate(schemes_t):
-                        jidx[(tail, c, pi, qi)] = builder.s_index(
-                            layers[tail], layers[c], p, q)
-        ivals, svals = builder.evaluate()
-        utables = [fin(ivals, svals) for fin in finalizers]
-        stats.i_calls = builder.i_entries
-        stats.s_calls = builder.s_entries
-        stats.pruned_halo = sum(utables[u].halo_cuts for u in uniq.values())
 
-        ptab_memo: Dict[Tuple[int, bool], Dict] = {}
+    def icost(l, p, halo=0):
+        stats.i_calls += 1
+        return est.i_cost(l, p, tb, extra_halo=halo)
 
-        def ptable(t: int, head_solo: bool):
-            u = uniq[bkeys[t]]
-            hit = ptab_memo.get((u, head_solo))
-            if hit is not None:
-                return hit
-            tbl = utables[u]
+    def scost(l, nxt, s, d):
+        stats.s_calls += 1
+        return est.s_cost(l, nxt, s, d, tb)
 
-            def seg_costs(i: int, pi: int):
-                return tbl.seg_options(i, pi, head_solo)
+    ptab_memo2: Dict[Tuple[int, bool], Dict] = {}
 
-            out = _pinned_pareto_tables(len(branches[t]), schemes_t,
-                                        seg_costs, tbl.bound, ub, stats)
-            ptab_memo[(u, head_solo)] = out
-            return out
+    def ptable(t: int, head_solo: bool):
+        hit = ptab_memo2.get((t, head_solo))
+        if hit is not None:
+            return hit
+        ls = [layers[i] for i in branches[t].ids]
+        seg_costs, bound_cost = _scalar_chain_providers(
+            ls, icost, scost, schemes_t, max_segment, allow_fusion,
+            head_solo, tb.nodes, stats)
+        out = _pinned_pareto_tables(len(ls), schemes_t, seg_costs,
+                                    bound_cost, ub, stats)
+        ptab_memo2[(t, head_solo)] = out
+        return out
 
-        def jscost(prod: int, cons: Optional[int], pi: int,
-                   qi: Optional[int]) -> float:
-            return float(svals[jidx[(prod, cons, pi, qi)]])
-    else:
-        def icost(l, p, halo=0):
-            stats.i_calls += 1
-            return est.i_cost(l, p, tb, extra_halo=halo)
-
-        def scost(l, nxt, s, d):
-            stats.s_calls += 1
-            return est.s_cost(l, nxt, s, d, tb)
-
-        ptab_memo2: Dict[Tuple[int, bool], Dict] = {}
-
-        def ptable(t: int, head_solo: bool):
-            hit = ptab_memo2.get((t, head_solo))
-            if hit is not None:
-                return hit
-            ls = [layers[i] for i in branches[t].ids]
-            seg_costs, bound_cost = _scalar_chain_providers(
-                ls, icost, scost, schemes_t, max_segment, allow_fusion,
-                head_solo, tb.nodes, stats)
-            out = _pinned_pareto_tables(len(ls), schemes_t, seg_costs,
-                                        bound_cost, ub, stats)
-            ptab_memo2[(t, head_solo)] = out
-            return out
-
-        def jscost(prod: int, cons: Optional[int], pi: int,
-                   qi: Optional[int]) -> float:
-            return scost(layers[prod],
-                         None if cons is None else layers[cons],
-                         schemes_t[pi],
-                         None if qi is None else schemes_t[qi])
+    def jscost(prod: int, cons: Optional[int], pi: int,
+               qi: Optional[int]) -> float:
+        return scost(layers[prod],
+                     None if cons is None else layers[cons],
+                     schemes_t[pi],
+                     None if qi is None else schemes_t[qi])
 
     points, build = _dag_pipeline_frontier(graph, schemes_t, ptable, jscost,
                                            ub, stats)

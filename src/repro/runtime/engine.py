@@ -230,6 +230,10 @@ class MeasuredOccupancy:
     link_occupancy_s: float    # summed sync-stage wall time
     period_s: float            # pipelined steady-state period estimate
     latency_s: float           # single-request wall time
+    #: dispatch failures behind the measurement (retries + timeouts +
+    #: degraded fallbacks) — ``cluster.refine`` treats any nonzero value
+    #: as an untrusted sample and keeps its previous axis weights
+    failures: int = 0
 
 
 @dataclasses.dataclass
@@ -249,6 +253,20 @@ class ExecStats:
         default_factory=list, compare=False, repr=False)
     #: end-to-end wall seconds of the run (mesh executor only)
     wall_s: float = dataclasses.field(default=0.0, compare=False)
+    #: stage dispatches re-attempted after a failure (mesh executor with
+    #: ``stage_retries > 0``).  Excluded from equality with the same
+    #: rationale as wall times: failure incidence is environmental, the
+    #: geometry accounting above is the executor contract.
+    retries: int = dataclasses.field(default=0, compare=False)
+    #: stage dispatches that exceeded ``stage_timeout_s``
+    timeouts: int = dataclasses.field(default=0, compare=False)
+    #: runs completed by the degraded single-process fallback
+    fallbacks: int = dataclasses.field(default=0, compare=False)
+
+    @property
+    def failure_count(self) -> int:
+        """Total faults observed while producing this run's numbers."""
+        return self.retries + self.timeouts + self.fallbacks
 
     def to_occupancy(self) -> MeasuredOccupancy:
         """Fold the measured stage times into per-resource-class occupancy
@@ -274,7 +292,8 @@ class ExecStats:
         dev = max(per_dev.values()) if per_dev else 0.0
         return MeasuredOccupancy(
             dev_occupancy_s=dev, link_occupancy_s=sync,
-            period_s=max(dev, sync), latency_s=self.wall_s)
+            period_s=max(dev, sync), latency_s=self.wall_s,
+            failures=self.failure_count)
 
 
 def _rect_elems(r: Rect) -> int:
@@ -546,7 +565,10 @@ def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
                     executor: str = "local",
                     mesh=None,
                     instrument: bool = False,
-                    overlap: bool = True
+                    overlap: bool = True,
+                    stage_timeout_s: Optional[float] = None,
+                    stage_retries: int = 0,
+                    fallback: str = "raise"
                     ) -> Tuple[jnp.ndarray, ExecStats]:
     """Execute ``plan`` on ``nodes`` simulated devices.  ``jit_segments``
     routes each segment cell through the compiled-program cache (repeated
@@ -565,7 +587,14 @@ def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
     ``StageTime`` rows into the stats; ``overlap=False`` keeps boundary
     exchanges as their own dispatches (1:1 with the ``simsched`` stage
     DAG) instead of fusing them into the consuming compute stage.
-    ``jit_segments`` is ignored by the mesh executor (always compiled)."""
+    ``jit_segments`` is ignored by the mesh executor (always compiled).
+
+    Fault handling (mesh executor only): ``stage_timeout_s`` arms a
+    per-stage watchdog, ``stage_retries`` bounds dispatch re-attempts,
+    and ``fallback="local"`` degrades to this single-process executor
+    when the mesh has fewer live devices than the plan or a stage fails
+    terminally (``ExecStats.retries/timeouts/fallbacks`` record what
+    happened)."""
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
     if executor not in EXECUTORS:
@@ -574,7 +603,10 @@ def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
         from repro.runtime.mesh_exec import run_partitioned_mesh
         return run_partitioned_mesh(graph, weights, x, plan, nodes,
                                     backend=backend, mesh=mesh,
-                                    instrument=instrument, overlap=overlap)
+                                    instrument=instrument, overlap=overlap,
+                                    stage_timeout_s=stage_timeout_s,
+                                    stage_retries=stage_retries,
+                                    fallback=fallback)
     stats = ExecStats()
     if graph.is_chain:
         plan.validate()

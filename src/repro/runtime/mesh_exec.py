@@ -52,8 +52,9 @@ no ``shard_map``, no collectives.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +72,43 @@ from repro.runtime.engine import (BACKENDS, ExecStats, Rect, StageTime,
                                   exact_regions, merge_tensors)
 
 AXIS = "nodes"
+
+#: terminal-stage-failure behaviours of ``run_partitioned_mesh``
+FALLBACKS = ("raise", "local")
+
+
+class StageFailure(RuntimeError):
+    """Base of the mesh executor's fault exceptions (a dispatched pipeline
+    stage did not complete)."""
+
+
+class StageTimeoutError(StageFailure):
+    """A stage exceeded ``stage_timeout_s``.  Timeouts are counted in
+    ``ExecStats.timeouts`` but never retried — a wedged collective stays
+    wedged, re-dispatching just stacks another stuck module on the pool."""
+
+
+class StageDispatchError(StageFailure):
+    """A stage dispatch raised and exhausted its ``stage_retries``
+    re-attempts (each re-attempt is counted in ``ExecStats.retries``)."""
+
+
+def _timeout_message(label: str, timeout_s: float, nodes: int) -> str:
+    return (
+        f"mesh stage {label!r} exceeded stage_timeout_s={timeout_s:g}s "
+        f"({nodes} plan nodes). Likely causes, most common first: "
+        f"(1) CPU host-platform thread-pool starvation — all fake devices "
+        f"share one dispatch pool, so threads parked in one stage module's "
+        f"collective rendezvous can starve another module's participants "
+        f"(the known 'collective_ops_utils ... may be stuck' stall; reduce "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count or keep the "
+        f"executor's serialized CPU dispatch enabled); "
+        f"(2) first-call XLA compilation of a large stage program — warm "
+        f"the program cache with one untimed run or raise the timeout; "
+        f"(3) a genuinely lost device — pass fallback='local' to degrade "
+        f"to the single-process engine instead of raising."
+    )
+
 
 #: compiled stage programs keyed by full static signature (mesh devices,
 #: per-node record tuples, shapes, backend) — repeated blocks across a
@@ -180,7 +218,10 @@ def _run_recs(recs, ws, x, backend: str):
 class _MeshRun:
     def __init__(self, graph: ModelGraph, mesh, nodes: int, backend: str,
                  instrument: bool, overlap: bool, stats: ExecStats,
-                 dtype) -> None:
+                 dtype, stage_timeout_s: Optional[float] = None,
+                 stage_retries: int = 0,
+                 fault_hook: Optional[Callable[[str, str, int],
+                                               None]] = None) -> None:
         self.graph = graph
         self.mesh = mesh
         self.n = nodes
@@ -189,6 +230,9 @@ class _MeshRun:
         self.overlap = overlap
         self.stats = stats
         self.dtype = dtype
+        self.stage_timeout_s = stage_timeout_s
+        self.stage_retries = stage_retries
+        self.fault_hook = fault_hook
         self.mesh_key = tuple(int(d.id) for d in mesh.devices.flat) \
             if mesh is not None else (0,)
         # The host ("cpu") platform executes dispatched modules on one
@@ -224,28 +268,94 @@ class _MeshRun:
     # -- dispatch + instrumentation ---------------------------------------
 
     def _dispatch(self, kind: str, label: str, fn, *args):
+        """Run one pipeline stage with the fault policy: a stage that
+        exceeds ``stage_timeout_s`` raises :class:`StageTimeoutError`
+        (counted, never retried — see the class docstring); any other
+        dispatch exception is re-attempted up to ``stage_retries`` times
+        (each counted) before :class:`StageDispatchError`.  ``fault_hook``
+        is a test seam called as ``(kind, label, attempt)`` before every
+        attempt — raising from it injects a deterministic fault."""
+        attempt = 0
+        while True:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(kind, label, attempt)
+                return self._execute(kind, label, fn, *args)
+            except StageTimeoutError:
+                self.stats.timeouts += 1
+                raise
+            except StageFailure:
+                raise
+            except Exception as exc:
+                if attempt >= self.stage_retries:
+                    raise StageDispatchError(
+                        f"mesh stage {label!r} failed after "
+                        f"{attempt + 1} attempt(s) "
+                        f"(stage_retries={self.stage_retries}): "
+                        f"{exc!r}") from exc
+                self.stats.retries += 1
+                attempt += 1
+
+    def _watched(self, label: str, body):
+        """Run ``body`` under the per-stage watchdog: a daemon worker
+        thread does the (blocking) JAX work while this thread joins with
+        ``stage_timeout_s``.  A stuck collective cannot be interrupted —
+        on timeout the worker is abandoned (daemonized, so it cannot hang
+        interpreter exit) and :class:`StageTimeoutError` surfaces."""
+        timeout = self.stage_timeout_s
+        if timeout is None:
+            return body()
+        box: Dict[str, object] = {}
+
+        def worker():
+            try:
+                box["out"] = body()
+            except BaseException as exc:    # noqa: BLE001 — re-raised
+                box["err"] = exc
+
+        th = threading.Thread(target=worker, daemon=True,
+                              name=f"mesh-stage:{label}")
+        th.start()
+        th.join(timeout)
+        if th.is_alive():
+            raise StageTimeoutError(
+                _timeout_message(label, timeout, self.n))
+        if "err" in box:
+            raise box["err"]
+        return box["out"]
+
+    def _execute(self, kind: str, label: str, fn, *args):
+        timed = self.stage_timeout_s is not None
         if not self.instrument:
+            def body():
+                out = fn(*args)
+                # async dispatch returns before the module runs — with a
+                # watchdog armed the stage must block inside it or the
+                # timeout would never observe the execution
+                if self.serialize or timed:
+                    jax.block_until_ready(out)
+                return out
+            return self._watched(label, body) if timed else body()
+
+        def body():
+            t0 = time.perf_counter()
             out = fn(*args)
-            if self.serialize:
-                jax.block_until_ready(out)
+            dev_done: Tuple[float, ...] = ()
+            lead = out[0] if isinstance(out, (tuple, list)) else out
+            if kind == "compute" and self.n > 1 \
+                    and hasattr(lead, "addressable_shards"):
+                shards = sorted(lead.addressable_shards,
+                                key=lambda s: s.index[0].start or 0)
+                done = []
+                for sh in shards:
+                    sh.data.block_until_ready()
+                    done.append(time.perf_counter() - t0)
+                dev_done = tuple(done)
+            jax.block_until_ready(out)
+            self.stats.stage_times.append(
+                StageTime(kind, label, time.perf_counter() - t0, dev_done))
             return out
-        t0 = time.perf_counter()
-        out = fn(*args)
-        dev_done: Tuple[float, ...] = ()
-        lead = out[0] if isinstance(out, (tuple, list)) else out
-        if kind == "compute" and self.n > 1 \
-                and hasattr(lead, "addressable_shards"):
-            shards = sorted(lead.addressable_shards,
-                            key=lambda s: s.index[0].start or 0)
-            done = []
-            for sh in shards:
-                sh.data.block_until_ready()
-                done.append(time.perf_counter() - t0)
-            dev_done = tuple(done)
-        jax.block_until_ready(out)
-        self.stats.stage_times.append(
-            StageTime(kind, label, time.perf_counter() - t0, dev_done))
-        return out
+        return self._watched(label, body) if timed else body()
 
     # -- boundary classification ------------------------------------------
 
@@ -682,11 +792,34 @@ class _MeshRun:
 # entry point
 # ---------------------------------------------------------------------------
 
+def _run_degraded(graph: ModelGraph, weights, x, plan: Plan, nodes: int,
+                  backend: str, stats: ExecStats
+                  ) -> Tuple[jnp.ndarray, ExecStats]:
+    """Degraded single-process fallback: execute the plan's shard
+    programs host-side (``runtime.engine`` local executor — no devices
+    needed) and carry the mesh run's failure counters over so
+    ``ExecStats.failure_count`` (and through it
+    ``MeasuredOccupancy.failures``) records the degradation."""
+    from repro.runtime import engine as _engine
+    out, local_stats = _engine.run_partitioned(
+        graph, weights, x, plan, nodes, backend=backend,
+        executor="local")
+    local_stats.retries = stats.retries
+    local_stats.timeouts = stats.timeouts
+    local_stats.fallbacks = stats.fallbacks + 1
+    return out, local_stats
+
+
 def run_partitioned_mesh(graph: ModelGraph, weights, x: jnp.ndarray,
                          plan: Plan, nodes: int, *,
                          backend: str = "xla", mesh=None,
                          instrument: bool = False,
-                         overlap: bool = True
+                         overlap: bool = True,
+                         stage_timeout_s: Optional[float] = None,
+                         stage_retries: int = 0,
+                         fallback: str = "raise",
+                         fault_hook: Optional[Callable[[str, str, int],
+                                                       None]] = None
                          ) -> Tuple[jnp.ndarray, ExecStats]:
     """Execute ``plan`` on a real JAX device mesh — one device per plan
     node.  See the module docstring for the stage/collective model.
@@ -694,11 +827,35 @@ def run_partitioned_mesh(graph: ModelGraph, weights, x: jnp.ndarray,
     whose geometry accounting equals the local executor's; with
     ``instrument=True`` the stats additionally carry measured per-stage
     wall times (run twice and read the second run's stats — the first
-    call pays compilation)."""
+    call pays compilation).
+
+    Fault handling: ``stage_timeout_s`` arms a per-stage watchdog (the
+    timeout covers first-call compilation — warm the program cache or
+    budget for it); ``stage_retries`` bounds re-dispatches of a failed
+    stage; ``fallback="local"`` degrades to the single-process engine
+    instead of raising when the backing platform has fewer devices than
+    the plan needs (mesh shrink) or a stage fails terminally.
+    ``fault_hook(kind, label, attempt)`` is called before every stage
+    attempt — a test seam for deterministic fault injection.
+    ``ExecStats.retries/timeouts/fallbacks`` record what happened."""
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
     if nodes < 1:
         raise ValueError(f"nodes must be >= 1, got {nodes}")
+    if fallback not in FALLBACKS:
+        raise ValueError(f"fallback {fallback!r} not in {FALLBACKS}")
+    if stage_retries < 0:
+        raise ValueError(f"stage_retries must be >= 0, got {stage_retries}")
+    if stage_timeout_s is not None and stage_timeout_s <= 0:
+        raise ValueError(
+            f"stage_timeout_s must be > 0, got {stage_timeout_s}")
+    stats = ExecStats()
+    if mesh is None and nodes > 1 and fallback == "local" \
+            and len(jax.devices()) < nodes:
+        # mesh shrink: the plan wants more devices than the platform has
+        # left — degrade instead of failing make_nodes_mesh
+        return _run_degraded(graph, weights, x, plan, nodes, backend,
+                             stats)
     if mesh is None:
         mesh = make_nodes_mesh(nodes) if nodes > 1 else None
     if mesh is not None:
@@ -707,9 +864,21 @@ def run_partitioned_mesh(graph: ModelGraph, weights, x: jnp.ndarray,
             raise ValueError(
                 f"mesh must be 1-D over axis {AXIS!r} with size {nodes}, "
                 f"got {dict(mesh.shape)}")
-    stats = ExecStats()
     run = _MeshRun(graph, mesh, nodes, backend, instrument, overlap,
-                   stats, x.dtype)
+                   stats, x.dtype, stage_timeout_s, stage_retries,
+                   fault_hook)
+    try:
+        return _mesh_body(run, graph, weights, x, plan, nodes, stats)
+    except StageFailure:
+        if fallback != "local":
+            raise
+        return _run_degraded(graph, weights, x, plan, nodes, backend,
+                             stats)
+
+
+def _mesh_body(run: _MeshRun, graph: ModelGraph, weights, x, plan: Plan,
+               nodes: int, stats: ExecStats
+               ) -> Tuple[jnp.ndarray, ExecStats]:
     t0 = time.perf_counter()
 
     if graph.is_chain:

@@ -4,8 +4,9 @@ import copy
 import json
 import os
 
-from benchmarks.check_regression import (check_kernels, check_mesh,
-                                         check_search, check_sweep, main)
+from benchmarks.check_regression import (check_churn, check_kernels,
+                                         check_mesh, check_search,
+                                         check_sweep, main)
 
 _BASE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                      "baselines")
@@ -217,7 +218,8 @@ def test_cli_end_to_end(tmp_path):
 
 def test_committed_baselines_pass_against_themselves():
     checkers = {"search": check_search, "sweep": check_sweep,
-                "kernels": check_kernels, "mesh": check_mesh}
+                "kernels": check_kernels, "mesh": check_mesh,
+                "churn": check_churn}
     for kind, checker in checkers.items():
         path = os.path.join(_BASE, f"BENCH_{kind}.json")
         with open(path) as f:

@@ -1,0 +1,308 @@
+"""Fault injection + strategy replay (``cluster.churn``) and the
+churn CI gate.
+
+* event/scenario validation and seeded-generator determinism;
+* :func:`run_churn` replay structure: the ``never`` strategy's permanent
+  outage after a crash, incremental's keep decisions and cache-reuse
+  paths, the scratch strategy's cutover stalls;
+* the hypothesis property (random churn sequences): every replanned plan
+  runs exactly on the registry's live membership and never exceeds the
+  surviving devices' memory budgets;
+* ``check_regression --kind churn``: win-flag flips and missing sections
+  fail, timings never gate.
+"""
+import copy
+
+import pytest
+
+from benchmarks.check_regression import check_churn
+from repro.cluster import (DeviceRegistry, DeviceSpec, DeviceState,
+                           ElasticPlanner, MembershipError, mixed_fast_slow,
+                           plan_memory_ok, stepped)
+from repro.cluster.churn import (CHURN_SCENARIOS, EVENT_KINDS, STRATEGIES,
+                                 ChurnEvent, ChurnScenario,
+                                 compare_strategies, random_scenario,
+                                 run_churn, scenario_flap, scenario_mixed)
+from repro.cluster.elastic import PLANNABLE_STATES
+from repro.core import ConvT, LayerSpec, chain
+
+
+def _toy_chain(h=20):
+    return chain("toy", [
+        LayerSpec("c0", ConvT.CONV, h, h, 3, 8, 3, 1, 1),
+        LayerSpec("dw", ConvT.DWCONV, h, h, 8, 8, 3, 1, 1),
+        LayerSpec("pw", ConvT.POINTWISE, h, h, 8, 16, 1, 1, 0),
+        LayerSpec("c1", ConvT.CONV, h, h, 16, 16, 3, 2, 1),
+        LayerSpec("c2", ConvT.CONV, h // 2, h // 2, 16, 8, 3, 1, 1),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# events + scenario generators
+# ---------------------------------------------------------------------------
+
+def test_event_validation():
+    with pytest.raises(ValueError):
+        ChurnEvent(t=1.0, kind="explode")
+    with pytest.raises(ValueError):
+        ChurnEvent(t=1.0, kind="depart")          # needs a device name
+    with pytest.raises(ValueError):
+        ChurnEvent(t=1.0, kind="arrive")          # needs a DeviceSpec
+    ChurnEvent(t=1.0, kind="arrive", spec=DeviceSpec(name="x"))
+    ChurnEvent(t=1.0, kind="slowdown", factor=0.5)
+
+
+def test_scenario_sorts_and_bounds_events():
+    e1 = ChurnEvent(t=5.0, kind="depart", device="a")
+    e2 = ChurnEvent(t=2.0, kind="derate", device="b", factor=0.5)
+    s = ChurnScenario(name="s", horizon_s=10.0, events=(e1, e2))
+    assert [e.t for e in s.events] == [2.0, 5.0]
+    assert s.n_departures == 1
+    with pytest.raises(ValueError):
+        ChurnScenario(name="bad", horizon_s=4.0, events=(e1,))
+
+
+def test_generators_are_seed_deterministic():
+    cluster = stepped(4)
+    for gen in (*CHURN_SCENARIOS.values(),
+                lambda c, seed: random_scenario(c, seed=seed)):
+        a = gen(cluster, seed=3)
+        b = gen(cluster, seed=3)
+        assert a.events == b.events and a.name == b.name
+    # the random process actually varies with the seed
+    assert random_scenario(cluster, seed=1).events != \
+        random_scenario(cluster, seed=2).events
+
+
+def test_random_scenario_guarantees_a_departure_and_valid_kinds():
+    cluster = mixed_fast_slow(4)
+    for seed in range(8):
+        scen = random_scenario(cluster, seed=seed)
+        assert scen.n_departures >= 1
+        assert all(e.kind in EVENT_KINDS for e in scen.events)
+        assert all(0.0 < e.t < scen.horizon_s for e in scen.events)
+
+
+# ---------------------------------------------------------------------------
+# strategy replay
+# ---------------------------------------------------------------------------
+
+def test_run_churn_rejects_unknown_strategy():
+    g = _toy_chain()
+    cluster = stepped(3)
+    scen = scenario_mixed(cluster, seed=0)
+    with pytest.raises(ValueError):
+        run_churn(g, cluster, scen, "sometimes")
+
+
+def test_strategy_structure_under_mixed_churn():
+    g = _toy_chain()
+    cluster = stepped(4)
+    scen = scenario_mixed(cluster, seed=0)
+    res = compare_strategies(g, cluster, scen)
+    assert set(res) == set(STRATEGIES)
+    nev, scr, inc = res["never"], res["scratch"], res["incremental"]
+    # never: no replans — the crash at 0.55h is a permanent outage, so
+    # both replanning strategies dominate its goodput deterministically
+    assert nev.n_replans == 0
+    assert inc.goodput_rps > nev.goodput_rps
+    assert scr.goodput_rps > nev.goodput_rps
+    # replans partition into keeps + migrations; scratch never keeps
+    # (it re-adopts the frontier best every time) and pays cutover stalls
+    assert inc.n_keeps + inc.n_migrations == inc.n_replans
+    assert scr.n_keeps == 0 and scr.n_migrations == scr.n_replans
+    assert scr.stall_total_s > 0.0
+    # incremental exercised at least one reuse path
+    assert sum(inc.reuse_counts.values()) > 0
+    # every injected fault opened a recovery window
+    assert len(nev.recoveries_s) == len(inc.recoveries_s) > 0
+    assert inc.mean_recovery_s < nev.mean_recovery_s
+
+
+def test_flap_hits_the_frontier_cache():
+    g = _toy_chain()
+    cluster = stepped(4)
+    scen = scenario_flap(cluster, seed=0)
+    inc = run_churn(g, cluster, scen, "incremental")
+    # revisited membership states resolve from the whole-frontier LRU
+    assert inc.reuse_counts.get("frontier_cache", 0) >= 2
+    nev = run_churn(g, cluster, scen, "never")
+    assert inc.goodput_rps > nev.goodput_rps
+
+
+def test_shared_sim_cache_changes_nothing():
+    g = _toy_chain()
+    cluster = stepped(3)
+    scen = scenario_mixed(cluster, seed=1)
+    cache: dict = {}
+    a = run_churn(g, cluster, scen, "incremental", sim_cache=cache)
+    b = run_churn(g, cluster, scen, "incremental", sim_cache=cache)
+    # replays embed real planner wall-clock in the timeline, so outcomes
+    # are structurally — not bitwise — reproducible across runs
+    assert a.served_requests == pytest.approx(b.served_requests, rel=0.05)
+    assert (a.n_replans, a.n_migrations, a.n_keeps) == \
+        (b.n_replans, b.n_migrations, b.n_keeps)
+    assert len(a.recoveries_s) == len(b.recoveries_s)
+    assert len(cache) > 0
+
+
+# ---------------------------------------------------------------------------
+# property: replanned plans live on the surviving membership
+# ---------------------------------------------------------------------------
+
+try:        # property test only — the rest of this module runs without it
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                     # pyproject [dev] extra
+    HAS_HYPOTHESIS = False
+
+
+def _apply_event(reg, e, crashed):
+    """Project one scenario event onto the registry the way the replay
+    loop does (crashes silence heartbeats; everything else is a report)."""
+    if e.kind == "depart":
+        crashed.add(e.device)
+    elif e.kind == "leave":
+        if reg.get(e.device) is not None \
+                and reg.member(e.device).state in PLANNABLE_STATES:
+            reg.leave(e.device, now=e.t)
+    elif e.kind == "arrive":
+        crashed.discard(e.spec.name)
+        m = reg.get(e.spec.name)
+        if m is None or m.state in (DeviceState.DEAD, DeviceState.LEFT):
+            reg.join(e.spec, now=e.t)
+        reg.heartbeat(e.spec.name, now=e.t)
+    elif e.kind == "derate":
+        if reg.get(e.device) is not None:
+            reg.report_derate(e.device, e.factor, now=e.t)
+    elif e.kind == "slowdown":
+        reg.set_link_factor(e.factor)
+    elif e.kind == "recover":
+        if e.device is not None and reg.get(e.device) is not None:
+            reg.report_derate(e.device, 1.0, now=e.t)
+        else:
+            reg.set_link_factor(1.0)
+
+
+def _check_membership_property(seed):
+    """Under arbitrary seeded churn, every plan the elastic planner
+    returns (1) is planned over exactly the registry's live membership —
+    no shard can land on a dead or departed device — and (2) fits every
+    surviving device's memory budget."""
+    g = _toy_chain()
+    cluster = stepped(4)
+    scen = random_scenario(cluster, seed=seed, n_events=5)
+    reg = DeviceRegistry.from_cluster(cluster, heartbeat_interval_s=1.0,
+                                      suspect_misses=1, dead_misses=2)
+    planner = ElasticPlanner(g)
+    crashed: set = set()
+    old_plan = old_cluster = None
+    old_period = None
+    for e in scen.events:
+        # non-crashed members keep their leases current up to the event
+        for m in reg.members():
+            if m.spec.name in crashed:
+                continue
+            if m.state in (DeviceState.DEAD, DeviceState.LEFT):
+                continue
+            reg.heartbeat(m.spec.name, now=e.t)
+        _apply_event(reg, e, crashed)
+        reg.tick(now=e.t)
+        try:
+            proj = reg.cluster()
+        except MembershipError:
+            continue          # nothing live: nothing to plan
+        dec = planner.replan(proj, old_plan, old_cluster,
+                             old_period_s=old_period)
+        live = {m.spec.name for m in reg.live_members()}
+        # the plan's cluster is exactly the live membership (positional
+        # shards can only land on live devices) ...
+        assert {d.name for d in proj.devices} == live
+        assert len(proj.devices) == len(reg.live_members())
+        # ... and fits every survivor's memory budget
+        assert all(plan_memory_ok(g, dec.plan, proj))
+        assert dec.period_s > 0.0
+        old_plan, old_cluster, old_period = dec.plan, proj, dec.period_s
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    def test_replans_respect_membership_and_memory(seed):
+        _check_membership_property(seed)
+else:
+    def test_replans_respect_membership_and_memory():
+        pytest.skip("hypothesis not installed (pyproject [dev] extra); "
+                    "smoke three fixed seeds instead")
+
+
+def test_membership_property_fixed_seeds():
+    """Deterministic slice of the property: always runs, even without
+    hypothesis, so the invariant is never fully unexercised."""
+    for seed in (0, 7, 42):
+        _check_membership_property(seed)
+
+
+# ---------------------------------------------------------------------------
+# CI gate: check_regression --kind churn
+# ---------------------------------------------------------------------------
+
+CHURN = {
+    "model": "mobilenet",
+    "noise_note": "advisory",
+    "presets": {
+        "stepped": {
+            "aggregate": {
+                "never": {"goodput_rps": 26.0, "mean_recovery_s": 7.5,
+                          "plan_wall_us": 0.0},
+                "scratch": {"goodput_rps": 39.6, "mean_recovery_s": 1.62,
+                            "plan_wall_us": 300000.0},
+                "incremental": {"goodput_rps": 40.8,
+                                "mean_recovery_s": 1.51,
+                                "plan_wall_us": 150000.0},
+            },
+            "wins": {"recovery_beats_scratch": True,
+                     "recovery_beats_never": True,
+                     "goodput_beats_scratch": True,
+                     "goodput_beats_never": True,
+                     "incremental_reused": True},
+        },
+    },
+}
+
+
+def test_churn_clean_record_passes():
+    assert check_churn(CHURN, CHURN, 2.0, 5000.0) == []
+
+
+def test_churn_win_flag_flips_fail():
+    for flag in CHURN["presets"]["stepped"]["wins"]:
+        cur = copy.deepcopy(CHURN)
+        cur["presets"]["stepped"]["wins"][flag] = False
+        bad = check_churn(cur, CHURN, 2.0, 5000.0)
+        assert len(bad) == 1 and flag in bad[0], (flag, bad)
+
+
+def test_churn_missing_sections_fail():
+    cur = copy.deepcopy(CHURN)
+    del cur["presets"]["stepped"]
+    assert any("preset missing" in b
+               for b in check_churn(cur, CHURN, 2.0, 5000.0))
+    cur2 = copy.deepcopy(CHURN)
+    del cur2["presets"]["stepped"]["aggregate"]["incremental"]
+    assert any("aggregate missing" in b
+               for b in check_churn(cur2, CHURN, 2.0, 5000.0))
+    cur3 = copy.deepcopy(CHURN)
+    del cur3["presets"]["stepped"]["wins"]["goodput_beats_never"]
+    assert any("missing" in b
+               for b in check_churn(cur3, CHURN, 2.0, 5000.0))
+
+
+def test_churn_timings_never_gate():
+    # a 100x planner-wall blowup alone must NOT fail the gate — churn
+    # replays interleave wall clock with modeled time (see noise_note)
+    cur = copy.deepcopy(CHURN)
+    agg = cur["presets"]["stepped"]["aggregate"]
+    agg["incremental"]["plan_wall_us"] = 1.5e7
+    agg["incremental"]["mean_recovery_s"] = 150.0
+    assert check_churn(cur, CHURN, 2.0, 5000.0) == []

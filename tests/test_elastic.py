@@ -1,0 +1,405 @@
+"""Elastic clusters: membership state machine, plan-aware memory,
+migration costing, and the incremental replanner's reuse ladder.
+
+Covers the three layers of ``cluster.elastic``:
+
+* **DeviceRegistry** — heartbeat/lease transitions (JOINING → LIVE →
+  SUSPECT → DEAD, graceful LEFT), derate/link reports, the seed-template
+  identity of ``cluster()`` while membership matches the seed, and the
+  invalid-transition errors;
+* **plan_device_bytes / migration_cost_s** — scheme-aware weight
+  ownership (OutC shards, spatial replicates), name-matched survivor
+  reuse, drain accounting;
+* **ElasticPlanner** — warm-vs-scratch frontier parity, the reuse
+  ladder (frontier cache / registration / s-rows / uniform rescale),
+  rational keep-vs-migrate, memory enforcement (``CapacityError``);
+
+plus the refine-loop convergence controls added alongside (``rel_tol``,
+``on_oscillation``, untrusted-sample guard).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cluster import (CapacityError, ClusterSpec, DeviceRegistry,
+                           DeviceSpec, DeviceState, ElasticPlanner,
+                           LinkSpec, MembershipError, RefineOscillationError,
+                           asym_uplink, cluster_pipeline_frontier,
+                           migration_cost_s, mixed_fast_slow,
+                           plan_device_bytes, plan_memory_ok,
+                           refine_with_simulator, stepped)
+from repro.core import ConvT, LayerSpec, Objective, Scheme, chain
+from repro.core.partition import DTYPE_BYTES
+
+
+def _toy_chain(h=20):
+    return chain("toy", [
+        LayerSpec("c0", ConvT.CONV, h, h, 3, 8, 3, 1, 1),
+        LayerSpec("dw", ConvT.DWCONV, h, h, 8, 8, 3, 1, 1),
+        LayerSpec("pw", ConvT.POINTWISE, h, h, 8, 16, 1, 1, 0),
+        LayerSpec("c1", ConvT.CONV, h, h, 16, 16, 3, 2, 1),
+        LayerSpec("c2", ConvT.CONV, h // 2, h // 2, 16, 8, 3, 1, 1),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# DeviceRegistry state machine
+# ---------------------------------------------------------------------------
+
+def test_registry_seeds_live_and_returns_template():
+    # asymmetric per-edge links (one congested uplink, as in the
+    # asym_uplink preset, but with the unique device names the registry
+    # is keyed on)
+    base = asym_uplink(4)
+    cluster = dataclasses.replace(
+        base, devices=tuple(dataclasses.replace(d, name=f"d{i}")
+                            for i, d in enumerate(base.devices)))
+    reg = DeviceRegistry.from_cluster(cluster)
+    assert all(m.state is DeviceState.LIVE for m in reg.members())
+    assert len(reg.live_members()) == 4
+    # while membership == seed set, cluster() IS the seed (per-edge links
+    # survive — a uniform re-projection would lose the slow uplink)
+    assert reg.cluster() is cluster
+
+
+def test_registry_rejects_duplicate_device_names():
+    # asym_uplink's anonymous devices all share one name — a registry
+    # keyed by DeviceSpec.name must refuse the second join rather than
+    # silently alias two physical boards
+    with pytest.raises(MembershipError):
+        DeviceRegistry.from_cluster(asym_uplink(2))
+
+
+def test_registry_ctor_validation():
+    with pytest.raises(ValueError):
+        DeviceRegistry(heartbeat_interval_s=0.0)
+    with pytest.raises(ValueError):
+        DeviceRegistry(suspect_misses=0)
+    with pytest.raises(ValueError):
+        DeviceRegistry(suspect_misses=3, dead_misses=2)
+
+
+def test_registry_join_heartbeat_transitions():
+    reg = DeviceRegistry(heartbeat_interval_s=1.0, suspect_misses=2,
+                         dead_misses=4)
+    ch = reg.join(DeviceSpec(name="a"), now=0.0)
+    assert ch.new is DeviceState.JOINING
+    assert reg.live_members() == ()          # JOINING is not plannable
+    ch = reg.heartbeat("a", now=0.5)
+    assert (ch.old, ch.new) == (DeviceState.JOINING, DeviceState.LIVE)
+    # duplicate join of a non-dead member is a protocol error
+    with pytest.raises(MembershipError):
+        reg.join(DeviceSpec(name="a"), now=1.0)
+    with pytest.raises(MembershipError):
+        reg.heartbeat("ghost", now=1.0)
+
+
+def test_registry_lease_suspect_then_dead_then_rejoin():
+    reg = DeviceRegistry(heartbeat_interval_s=1.0, suspect_misses=2,
+                         dead_misses=4)
+    reg.join(DeviceSpec(name="a"), now=0.0)
+    reg.join(DeviceSpec(name="b"), now=0.0)
+    reg.heartbeat("a", now=0.0)
+    reg.heartbeat("b", now=0.0)
+    # b keeps heartbeating, a goes silent
+    reg.heartbeat("b", now=2.5)
+    changes = reg.tick(now=2.5)
+    assert [(c.name, c.new) for c in changes] == \
+        [("a", DeviceState.SUSPECT)]
+    # SUSPECT is still plannable — eviction is the disruptive act
+    assert {m.spec.name for m in reg.live_members()} == {"a", "b"}
+    reg.heartbeat("b", now=4.5)
+    changes = reg.tick(now=4.5)
+    assert [(c.name, c.new) for c in changes] == [("a", DeviceState.DEAD)]
+    assert {m.spec.name for m in reg.live_members()} == {"b"}
+    # DEAD devices must rejoin before heartbeating
+    with pytest.raises(MembershipError):
+        reg.heartbeat("a", now=5.0)
+    reg.join(DeviceSpec(name="a"), now=5.0)
+    reg.heartbeat("a", now=5.0)
+    assert reg.member("a").state is DeviceState.LIVE
+    # a SUSPECT device that heartbeats again returns to LIVE
+    reg.tick(now=7.6)
+    assert reg.member("b").state is DeviceState.SUSPECT
+    ch = reg.heartbeat("b", now=7.7)
+    assert (ch.old, ch.new) == (DeviceState.SUSPECT, DeviceState.LIVE)
+
+
+def test_registry_leave_is_immediate_and_empty_cluster_raises():
+    cluster = stepped(2)
+    reg = DeviceRegistry.from_cluster(cluster)
+    names = [d.name for d in cluster.devices]
+    reg.leave(names[0], now=1.0)
+    assert reg.member(names[0]).state is DeviceState.LEFT
+    assert len(reg.live_members()) == 1
+    reg.leave(names[1], now=2.0)
+    with pytest.raises(MembershipError):
+        reg.cluster()
+
+
+def test_registry_derate_and_link_factor_project_into_cluster():
+    cluster = stepped(3)
+    reg = DeviceRegistry.from_cluster(cluster)
+    name = cluster.devices[0].name
+    v0 = reg.version
+    sig0 = reg.signature()
+    reg.report_derate(name, 0.5, now=1.0)
+    assert reg.version > v0 and reg.signature() != sig0
+    proj = reg.cluster()
+    assert proj.devices[0].eff_derate == pytest.approx(
+        cluster.devices[0].eff_derate * 0.5)
+    # capability weights shift toward the healthy devices
+    assert proj.capability_weights[0] < cluster.capability_weights[0]
+    # clearing the report restores the seed template identity
+    reg.report_derate(name, 1.0, now=2.0)
+    assert reg.cluster() is cluster
+    reg.set_link_factor(0.5)
+    assert reg.cluster().bottleneck_bw_gbps == pytest.approx(
+        cluster.bottleneck_bw_gbps * 0.5)
+    with pytest.raises(ValueError):
+        reg.report_derate(name, 0.0, now=3.0)
+    with pytest.raises(ValueError):
+        reg.set_link_factor(-1.0)
+
+
+def test_registry_flap_restores_template_identity():
+    # depart + rejoin of the LAST device restores join order, so the
+    # projection collapses back to the seed template — the state the
+    # elastic planner's frontier cache keys on
+    cluster = stepped(4)
+    reg = DeviceRegistry.from_cluster(
+        cluster, heartbeat_interval_s=1.0, dead_misses=2)
+    victim = cluster.devices[-1]
+    sig0 = reg.signature()
+    for m in reg.members():
+        if m.spec.name != victim.name:
+            reg.heartbeat(m.spec.name, now=3.0)
+    reg.tick(now=3.0)
+    assert reg.member(victim.name).state is DeviceState.DEAD
+    assert reg.signature() != sig0
+    reg.join(victim, now=4.0)
+    reg.heartbeat(victim.name, now=4.0)
+    assert reg.signature() == sig0
+    assert reg.cluster() is cluster
+
+
+# ---------------------------------------------------------------------------
+# plan-aware memory + migration geometry
+# ---------------------------------------------------------------------------
+
+def _fixed_plan(graph, scheme):
+    from repro.core.plan import Plan
+    from repro.core.partition import Mode
+    return Plan(steps=tuple((scheme, Mode.T) for _ in graph.layers))
+
+
+def test_plan_device_bytes_outc_shards_spatial_replicates():
+    # weight-heavy chain (big pointwise banks, tiny maps) so filter
+    # ownership dominates the activation peak
+    g = chain("wide", [
+        LayerSpec("p0", ConvT.POINTWISE, 4, 4, 64, 256, 1, 1, 0),
+        LayerSpec("p1", ConvT.POINTWISE, 4, 4, 256, 256, 1, 1, 0),
+        LayerSpec("p2", ConvT.POINTWISE, 4, 4, 256, 64, 1, 1, 0),
+    ])
+    cluster = stepped(4)
+    total_w = sum(l.weight_elems() for l in g.layers) * DTYPE_BYTES
+    outc = plan_device_bytes(g, _fixed_plan(g, Scheme.OUTC), cluster)
+    inh = plan_device_bytes(g, _fixed_plan(g, Scheme.INH), cluster)
+    # spatial: every device holds every filter bank
+    assert all(float(b) >= total_w for b in inh)
+    # OutC: the banks are partitioned by capability share — no device
+    # holds the full set, and the fleet total is well under the
+    # replicated fleet total
+    assert all(float(b) < total_w for b in outc)
+    assert float(outc.sum()) < float(inh.sum())
+
+
+def test_plan_memory_ok_flags_small_devices():
+    g = _toy_chain()
+    cluster = stepped(4)
+    tiny = dataclasses.replace(
+        cluster,
+        devices=tuple(dataclasses.replace(d, mem_mb=0.001)
+                      for d in cluster.devices))
+    assert all(plan_memory_ok(g, _fixed_plan(g, Scheme.INH), cluster))
+    assert not any(plan_memory_ok(g, _fixed_plan(g, Scheme.INH), tiny))
+
+
+def test_migration_cost_cold_start_and_survivor_reuse():
+    g = _toy_chain()
+    cluster = stepped(4)
+    plan = _fixed_plan(g, Scheme.OUTC)
+    cold = migration_cost_s(g, None, None, plan, cluster)
+    assert cold.bytes_moved > 0 and cold.devices_touched == 4
+    # same plan on the same survivors: nothing to move
+    warm = migration_cost_s(g, plan, cluster, plan, cluster)
+    assert warm.bytes_moved == 0.0 and warm.total_s == 0.0
+    # drop the last device: survivors are matched by name, so only the
+    # victim's vacated intervals travel — strictly less than cold start
+    small = dataclasses.replace(
+        cluster, devices=cluster.devices[:-1],
+        links=cluster.links[:len(cluster.devices) - 1])
+    plan_s = _fixed_plan(g, Scheme.OUTC)
+    shrink = migration_cost_s(g, plan, cluster, plan_s, small)
+    cold_s = migration_cost_s(g, None, None, plan_s, small)
+    assert 0.0 < shrink.bytes_moved < cold_s.bytes_moved
+    # spatial -> spatial keeps every replicated bank in place
+    spat = migration_cost_s(g, _fixed_plan(g, Scheme.INH), cluster,
+                            _fixed_plan(g, Scheme.INW), cluster)
+    assert spat.bytes_moved == 0.0
+
+
+def test_migration_cost_drain_term():
+    g = _toy_chain()
+    cluster = stepped(4)
+    plan = _fixed_plan(g, Scheme.INH)
+    m = migration_cost_s(g, plan, cluster, plan, cluster,
+                         inflight=5, old_period_s=0.2)
+    assert m.drain_s == pytest.approx(1.0)
+    assert m.total_s == pytest.approx(m.move_s + 1.0)
+
+
+# ---------------------------------------------------------------------------
+# ElasticPlanner: reuse ladder + keep-vs-migrate
+# ---------------------------------------------------------------------------
+
+def test_planner_reuse_ladder_and_warm_scratch_parity():
+    g = _toy_chain()
+    cluster = stepped(4)
+    reg = DeviceRegistry.from_cluster(cluster)
+    pl = ElasticPlanner(g)
+    d0 = pl.replan(reg.cluster())
+    assert not any((d0.reuse["frontier_cache"], d0.reuse["registration"],
+                    d0.reuse["svals"]))
+    # uniform derate on every device scales all i-costs by one factor:
+    # registration + s-rows reuse plus the exact rescale fast path
+    for d in cluster.devices:
+        reg.report_derate(d.name, 0.5, now=1.0)
+    d1 = pl.replan(reg.cluster(), d0.plan, cluster,
+                   old_period_s=d0.period_s, consider_keep=False)
+    assert d1.reuse["registration"] and d1.reuse["svals"]
+    assert d1.reuse["rescale"] == pytest.approx(2.0)
+    # the rescaled frontier must equal a from-scratch build bit for bit
+    fresh = ElasticPlanner(g)
+    d1s = fresh.replan(reg.cluster(), consider_keep=False)
+    np.testing.assert_allclose(np.sort(d1.frontier.points, axis=0),
+                               np.sort(d1s.frontier.points, axis=0),
+                               rtol=1e-12)
+    assert d1.plan.steps == d1s.plan.steps
+    # reverting restores the original signature: whole-frontier LRU hit
+    for d in cluster.devices:
+        reg.report_derate(d.name, 1.0, now=2.0)
+    d2 = pl.replan(reg.cluster(), d1.plan, cluster, consider_keep=False)
+    assert d2.reuse["frontier_cache"]
+    assert d2.plan.steps == d0.plan.steps
+
+
+def test_planner_keep_vs_migrate_rationality():
+    g = _toy_chain()
+    cluster = stepped(4)
+    reg = DeviceRegistry.from_cluster(cluster)
+    pl = ElasticPlanner(g, horizon_requests=500.0)
+    d0 = pl.replan(reg.cluster())
+    assert d0.migrate and d0.point_idx is not None
+    # a trivial capability wobble: over a short horizon the migration
+    # cannot pay for itself, so the old plan is kept...
+    reg.report_derate(cluster.devices[0].name, 0.95, now=1.0)
+    short = ElasticPlanner(g, horizon_requests=1e-6)
+    short.replan(reg.cluster())  # prime caches (not required, just cheap)
+    dk = short.replan(reg.cluster(), d0.plan, cluster,
+                      old_period_s=d0.period_s)
+    assert not dk.migrate and dk.plan.steps == d0.plan.steps
+    assert dk.point_idx is None and dk.keep_score_s == dk.score_s
+    # ...and consider_keep=False forces the frontier-best adoption
+    df = short.replan(reg.cluster(), d0.plan, cluster,
+                      old_period_s=d0.period_s, consider_keep=False)
+    assert df.migrate and df.point_idx is not None
+    assert df.keep_score_s is None
+    # with an enormous horizon the better plan always wins: its score is
+    # never worse than keeping (equal steps count as keep)
+    long = ElasticPlanner(g, horizon_requests=1e9)
+    dm = long.replan(reg.cluster(), d0.plan, cluster,
+                     old_period_s=d0.period_s)
+    assert dm.period_s <= d0.period_s + 1e-12
+
+
+def test_planner_capacity_error_on_tiny_memory():
+    g = _toy_chain()
+    cluster = stepped(3)
+    tiny = dataclasses.replace(
+        cluster,
+        devices=tuple(dataclasses.replace(d, mem_mb=0.001)
+                      for d in cluster.devices))
+    pl = ElasticPlanner(g)
+    with pytest.raises(CapacityError):
+        pl.replan(tiny)
+    # enforce_memory=False plans anyway (advisory mode)
+    loose = ElasticPlanner(g, enforce_memory=False)
+    assert loose.replan(tiny).plan is not None
+
+
+# ---------------------------------------------------------------------------
+# refine-loop convergence controls
+# ---------------------------------------------------------------------------
+
+class _Occ:
+    failures = 0
+
+    def __init__(self, dev, link):
+        self.dev_occupancy_s = dev
+        self.link_occupancy_s = link
+        self.period_s = max(dev, link)
+
+
+def test_refine_oscillation_raises_when_asked():
+    g = _toy_chain()
+    cluster = stepped(4)
+    calls = {"n": 0}
+
+    def flip(plan):
+        # alternately blame compute then sync: the reweighted selection
+        # ping-pongs between the frontier's two ends — a genuine cycle
+        calls["n"] += 1
+        return (_Occ(10.0, 1e-3) if calls["n"] % 2 else _Occ(1e-3, 10.0))
+
+    with pytest.raises(RefineOscillationError):
+        refine_with_simulator(g, cluster, occupancy_fn=flip,
+                              on_oscillation="raise", max_iters=6)
+    # default "best" returns the simulator-best iterate, not converged
+    r = refine_with_simulator(g, cluster, occupancy_fn=flip, max_iters=6)
+    assert not r.converged and len(r.steps) >= 2
+    with pytest.raises(ValueError):
+        refine_with_simulator(g, cluster, on_oscillation="bogus")
+    with pytest.raises(ValueError):
+        refine_with_simulator(g, cluster, rel_tol=-0.1)
+
+
+def test_refine_rel_tol_accepts_near_stationary():
+    g = _toy_chain()
+    cluster = stepped(4)
+    calls = {"n": 0}
+
+    def drift(plan):
+        calls["n"] += 1
+        return _Occ(0.5 + 1e-6 * calls["n"], 0.2)   # ~ppm wobble
+
+    r = refine_with_simulator(g, cluster, occupancy_fn=drift,
+                              rel_tol=1e-3, max_iters=5)
+    assert r.converged and len(r.steps) == 2
+
+
+def test_refine_failed_sample_keeps_weights_and_never_certifies():
+    g = _toy_chain()
+    cluster = stepped(4)
+
+    class _Bad(_Occ):
+        failures = 2
+
+    r = refine_with_simulator(g, cluster, max_iters=5,
+                              occupancy_fn=lambda p: _Bad(0.5, 0.2))
+    # the untrusted sample is recorded but cannot move the axis weights,
+    # so the same point repeats — and the repeat is NOT a certified
+    # fixed point
+    assert len(r.steps) == 1 and not r.converged
+    assert r.steps[0].beta == 1.0 and r.steps[0].alpha == 1.0

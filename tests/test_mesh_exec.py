@@ -58,13 +58,35 @@ MODEL_TEST_KW = {
 }
 
 
+#: hard wall limit for one mesh subprocess — generous for compile-heavy
+#: 8-device runs, small enough that a wedged collective fails the test
+#: instead of hanging the whole suite until the CI job limit
+SUBPROC_TIMEOUT_S = 1200
+
+_STARVATION_MSG = (
+    "mesh subprocess exceeded {limit}s — on the CPU host platform this "
+    "is the known thread-pool starvation: all fake devices share one "
+    "dispatch pool, so threads parked in one stage module's collective "
+    "rendezvous can starve another module's participants (XLA logs "
+    "'collective_ops_utils ... may be stuck'). Reduce "
+    "XLA_FLAGS=--xla_force_host_platform_device_count, keep the "
+    "executor's serialized CPU dispatch enabled (_MeshRun.serialize), "
+    "or arm run_partitioned_mesh(stage_timeout_s=...) to fail the "
+    "single wedged stage instead of the whole process.")
+
+
 def _run(code: str) -> subprocess.CompletedProcess:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                          capture_output=True, text=True, env=env,
-                          timeout=1200)
+    try:
+        return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                              capture_output=True, text=True, env=env,
+                              timeout=SUBPROC_TIMEOUT_S)
+    except subprocess.TimeoutExpired as exc:
+        pytest.fail(_STARVATION_MSG.format(limit=SUBPROC_TIMEOUT_S)
+                    + f"\npartial stdout: {exc.stdout!r}"
+                    + f"\npartial stderr: {exc.stderr!r}")
 
 
 def _model_io(name, seed=0):
@@ -129,6 +151,159 @@ def test_mesh_needs_devices():
     plan = Plan([(Scheme.INH, Mode.T)] * len(g))
     with pytest.raises(RuntimeError, match="xla_force_host_platform"):
         run_partitioned(g, w, x, plan, nodes=4, executor="mesh")
+
+
+# ---------------------------------------------------------------------------
+# in-process: fault handling (1-node plans need no mesh; the shrink
+# precheck *wants* a device-starved process)
+# ---------------------------------------------------------------------------
+
+def test_fault_knob_validation():
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+    with pytest.raises(ValueError, match="fallback"):
+        run_partitioned(g, w, x, plan, nodes=1, executor="mesh",
+                        fallback="shrug")
+    with pytest.raises(ValueError, match="stage_retries"):
+        run_partitioned(g, w, x, plan, nodes=1, executor="mesh",
+                        stage_retries=-1)
+    with pytest.raises(ValueError, match="stage_timeout_s"):
+        run_partitioned(g, w, x, plan, nodes=1, executor="mesh",
+                        stage_timeout_s=0.0)
+
+
+def test_transient_fault_is_retried():
+    """Every stage dispatch fails once: with stage_retries=1 the run
+    completes, matches the local executor, and counts every re-attempt
+    (failure_count > 0 marks the occupancy sample untrusted for
+    refine)."""
+    from repro.runtime.mesh_exec import run_partitioned_mesh
+
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+    ref, s_ref = run_partitioned(g, w, x, plan, nodes=1)
+    failed = set()
+
+    def hook(kind, label, attempt):
+        if (kind, label) not in failed:
+            failed.add((kind, label))
+            raise OSError(f"injected transient fault at {label}")
+
+    out, s = run_partitioned_mesh(g, w, x, plan, nodes=1,
+                                  stage_retries=1, fault_hook=hook)
+    assert float(jnp.max(jnp.abs(out - ref))) == 0.0
+    assert s.retries == len(failed) > 0
+    assert s.timeouts == 0 and s.fallbacks == 0
+    assert s.failure_count == s.retries
+    # retries are advisory: stats still equal the clean run's geometry
+    assert s == s_ref
+
+
+def test_persistent_fault_exhausts_retries():
+    from repro.runtime.mesh_exec import (StageDispatchError,
+                                         run_partitioned_mesh)
+
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+
+    def hook(kind, label, attempt):
+        raise OSError("injected persistent fault")
+
+    with pytest.raises(StageDispatchError,
+                       match=r"failed after 3 attempt\(s\)"):
+        run_partitioned_mesh(g, w, x, plan, nodes=1, stage_retries=2,
+                             fault_hook=hook)
+
+
+def test_persistent_fault_degrades_to_local():
+    from repro.runtime.mesh_exec import run_partitioned_mesh
+
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+    ref, _ = run_partitioned(g, w, x, plan, nodes=1)
+
+    def hook(kind, label, attempt):
+        raise OSError("injected persistent fault")
+
+    out, s = run_partitioned_mesh(g, w, x, plan, nodes=1, stage_retries=1,
+                                  fallback="local", fault_hook=hook)
+    assert float(jnp.max(jnp.abs(out - ref))) == 0.0
+    assert s.fallbacks == 1 and s.retries >= 1
+    assert s.failure_count >= 2
+
+
+def test_timeout_is_never_retried():
+    """An injected StageTimeoutError must go straight to the fallback —
+    re-dispatching a wedged collective just stacks another stuck module
+    on the thread pool (see _timeout_message)."""
+    from repro.runtime.mesh_exec import (StageTimeoutError,
+                                         run_partitioned_mesh)
+
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+    ref, _ = run_partitioned(g, w, x, plan, nodes=1)
+
+    def hook(kind, label, attempt):
+        raise StageTimeoutError(f"injected timeout at {label}")
+
+    out, s = run_partitioned_mesh(g, w, x, plan, nodes=1,
+                                  stage_retries=5, fallback="local",
+                                  fault_hook=hook)
+    assert float(jnp.max(jnp.abs(out - ref))) == 0.0
+    assert s.timeouts == 1
+    assert s.retries == 0          # stage_retries never applied
+    assert s.fallbacks == 1
+    # and without a fallback the timeout propagates
+    with pytest.raises(StageTimeoutError, match="injected timeout"):
+        run_partitioned_mesh(g, w, x, plan, nodes=1, stage_retries=5,
+                             fault_hook=hook)
+
+
+def test_real_watchdog_fires_with_actionable_message():
+    """An unmeetable stage_timeout_s trips the watchdog on the first
+    (compiling) stage; the message names the known CPU thread-pool
+    starvation and its remedies."""
+    from repro.runtime.mesh_exec import StageTimeoutError
+
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+    with pytest.raises(StageTimeoutError, match="starvation"):
+        run_partitioned(g, w, x, plan, nodes=1, executor="mesh",
+                        stage_timeout_s=1e-4)
+
+
+def test_generous_timeout_counts_nothing():
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+    ref, s_ref = run_partitioned(g, w, x, plan, nodes=1)
+    out, s = run_partitioned(g, w, x, plan, nodes=1, executor="mesh",
+                             stage_timeout_s=300.0, stage_retries=2)
+    assert float(jnp.max(jnp.abs(out - ref))) == 0.0
+    assert s == s_ref
+    assert s.failure_count == 0
+
+
+def test_mesh_shrink_degrades_to_local():
+    """A 4-node plan in this 1-device process: with fallback='local' the
+    precheck degrades to the single-process engine instead of raising
+    the XLA_FLAGS hint (cf. test_mesh_needs_devices)."""
+    g, w, x = _model_io("mobilenet")
+    plan = plan_search(g, EST, Testbed(nodes=4, bandwidth_gbps=0.5)).plan
+    ref, _ = run_partitioned(g, w, x, plan, nodes=4)
+    out, s = run_partitioned(g, w, x, plan, nodes=4, executor="mesh",
+                             fallback="local")
+    assert float(jnp.max(jnp.abs(out - ref))) == 0.0
+    assert s.fallbacks == 1 and s.failure_count == 1
+
+
+def test_failure_counters_break_stats_trust_not_equality():
+    """ExecStats equality compares geometry only — failure counters are
+    excluded (a retried run still validates against the clean baseline)
+    but failure_count drives refine's trusted-sample logic."""
+    a, b = ExecStats(), ExecStats()
+    a.retries, a.timeouts, a.fallbacks = 2, 1, 1
+    assert a == b
+    assert a.failure_count == 4 and b.failure_count == 0
 
 
 def test_to_occupancy_arithmetic():
