@@ -186,8 +186,19 @@ def check_mesh(current: dict, baseline: dict, max_ratio: float,
     (``stats_equal``) and stage-structure agreement with the simulator
     (``structure_match``).  Timing fields are deliberately NOT gated:
     BENCH_mesh.json's ``noise_note`` documents why CPU host-platform
-    fake devices make every duration advisory."""
+    fake devices make every duration advisory.  The per-model ``skew``
+    summary (measured-vs-simulated stage ratios from
+    ``obs.skew.stage_skew``) is surfaced as an advisory ``skew_note``
+    on stderr — never a failure, and absent records are fine."""
     bad: List[str] = []
+    for model, cur in sorted(current.get("models", {}).items()):
+        skew = cur.get("skew") or {}
+        med = skew.get("median_ratio")
+        if med is not None:
+            print(f"# skew_note mesh/{model}: measured/sim median "
+                  f"{med:.2f}x over {skew.get('n_paired')} stages "
+                  f"(max |log2| {skew.get('max_abs_log2'):.2f}) — "
+                  f"advisory, see noise_note", file=sys.stderr)
     # the committed baseline is the full model set; the per-push CI job
     # runs the smoke subset, so only the smoke models are required —
     # any model that IS present gates on its flags

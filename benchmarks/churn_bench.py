@@ -123,10 +123,31 @@ def collect(smoke: bool = True) -> Dict:
     return record
 
 
-def run(smoke: bool = True, json_path: str | None = None) -> Dict:
+def run(smoke: bool = True, json_path: str | None = None,
+        trace_dir: str | None = None) -> Dict:
+    import os
+
     from .common import emit
 
-    record = collect(smoke=smoke)
+    if trace_dir:
+        # capture the planner-side spans (replan frontier/select/cutover,
+        # detect instants) and reuse counters for the whole sweep
+        from repro.obs import Metrics, Tracer, set_metrics, set_tracer, \
+            write_trace
+        os.makedirs(trace_dir, exist_ok=True)
+        tr = Tracer()
+        mx = Metrics()
+        set_tracer(tr)
+        set_metrics(mx)
+        try:
+            record = collect(smoke=smoke)
+        finally:
+            set_tracer(None)
+            set_metrics(None)
+        write_trace(os.path.join(trace_dir, "churn.trace.json"), tr)
+        mx.export(os.path.join(trace_dir, "churn_metrics.json"))
+    else:
+        record = collect(smoke=smoke)
     for pname, prec in record["presets"].items():
         for s, a in prec["aggregate"].items():
             emit(f"churn_{pname}_{s}", a["plan_wall_us"],
@@ -145,8 +166,9 @@ def run(smoke: bool = True, json_path: str | None = None) -> Dict:
 
 
 if __name__ == "__main__":
-    from .common import json_arg
+    from .common import json_arg, trace_dir_arg
     argv = sys.argv[1:]
     print("name,us_per_call,derived")
     run(smoke="--full" not in argv,
-        json_path=json_arg(argv, default="BENCH_churn.json"))
+        json_path=json_arg(argv, default="BENCH_churn.json"),
+        trace_dir=trace_dir_arg(argv))

@@ -23,6 +23,17 @@ def emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
+def trace_dir_arg(argv):
+    """Parse an optional ``--trace-dir PATH`` flag (shared by run.py and
+    the mesh/churn bench CLIs).  Returns None when absent."""
+    if "--trace-dir" not in argv:
+        return None
+    i = argv.index("--trace-dir")
+    if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
+        raise SystemExit("--trace-dir requires a PATH argument")
+    return argv[i + 1]
+
+
 def json_arg(argv, default: str = "BENCH_search.json"):
     """Parse an optional ``--json [PATH]`` flag (shared by run.py and
     search_time's CLI).  Returns None when absent, ``default`` when the

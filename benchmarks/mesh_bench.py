@@ -14,7 +14,16 @@ records:
   merge gather — see ``runtime.mesh_exec.validate_stage_decomposition``);
 * ``local_us`` / ``mesh_wall_us`` / ``dev_occupancy_us`` /
   ``link_occupancy_us`` — warm wall times and measured occupancy;
-* ``stages`` — per-stage ``{kind, label, sim_s, measured_s}`` pairs.
+* ``stages`` — per-stage ``{kind, label, sim_s, measured_s}`` pairs;
+* ``skew`` — per-stage measured/simulated ratios plus a
+  ``median_ratio`` / ``max_abs_log2`` summary (``obs.skew.stage_skew``);
+  advisory, surfaced by ``check_regression --kind mesh`` as a note.
+
+With ``--trace-dir PATH`` (or ``run(trace_dir=...)``) each model's warm
+staged run is captured by ``repro.obs.Tracer`` and written together with
+the simulator's timeline (same Perfetto schema, pid 2) to
+``PATH/mesh_<model>.trace.json``, plus a ``mesh_metrics.json`` counter
+snapshot — open the trace files at https://ui.perfetto.dev.
 
 ``check_regression.py --kind mesh`` gates the flags **hard**; every
 timing field is **advisory**: the "devices" are XLA host-platform fakes
@@ -37,7 +46,7 @@ import os
 import subprocess
 import sys
 
-from .common import emit, json_arg
+from .common import emit, json_arg, trace_dir_arg
 
 NODES = 4
 
@@ -62,13 +71,15 @@ NOISE_NOTE = (
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _bench_model(name: str) -> dict:
+def _bench_model(name: str, trace_dir: str | None = None) -> dict:
     import jax
     import jax.numpy as jnp
-    from repro.cluster import build_stages, homogeneous
+    from repro.cluster import build_stages, homogeneous, simulate_trace
     from repro.configs.edge_models import EDGE_MODELS
     from repro.core import Testbed
     from repro.core.dpp import plan_search
+    from repro.obs import Tracer, set_tracer, write_trace
+    from repro.obs.skew import stage_skew
     from repro.runtime.engine import init_weights, run_partitioned
     from repro.runtime.mesh_exec import validate_stage_decomposition
 
@@ -96,15 +107,28 @@ def _bench_model(name: str) -> dict:
     rel_err = float(jnp.max(jnp.abs(out - ref))) / scale
 
     # staged (overlap=False) run against the simulator's stage DAG;
-    # two runs so the measured one is warm
-    for _ in range(2):
+    # two runs so the measured one is warm (only the warm run is traced)
+    _, s_staged = run_partitioned(g, w, x, plan, nodes=NODES,
+                                  executor="mesh", instrument=True,
+                                  overlap=False)
+    tr = Tracer() if trace_dir else None
+    set_tracer(tr)
+    try:
         _, s_staged = run_partitioned(g, w, x, plan, nodes=NODES,
                                       executor="mesh", instrument=True,
                                       overlap=False)
+    finally:
+        set_tracer(None)
     cl = homogeneous(NODES, bandwidth_gbps=0.5)
     v = validate_stage_decomposition(s_staged, build_stages(g, plan, cl))
 
+    if trace_dir:
+        _, sim_tr = simulate_trace(g, plan, cl)
+        write_trace(os.path.join(trace_dir, f"mesh_{name}.trace.json"),
+                    tr, sim_tr)
+
     return {
+        "skew": stage_skew(v["stages"]),
         "rel_err": rel_err,
         "agree": rel_err < 1e-4,
         "stats_equal": s_ref == s_mesh,
@@ -120,38 +144,50 @@ def _bench_model(name: str) -> dict:
     }
 
 
-def _run_inner(json_path: str | None, smoke: bool) -> dict:
+def _run_inner(json_path: str | None, smoke: bool,
+               trace_dir: str | None = None) -> dict:
     import jax
     assert len(jax.devices()) >= NODES, jax.devices()
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
+        from repro.obs import Metrics, set_metrics
+        set_metrics(Metrics())
     models = SMOKE_MODELS if smoke else tuple(MODEL_KW)
     record = {"nodes": NODES, "devices": len(jax.devices()),
               "noise_note": NOISE_NOTE, "models": {}}
     for name in models:
-        rec = _bench_model(name)
+        rec = _bench_model(name, trace_dir=trace_dir)
         record["models"][name] = rec
         flags = "ok" if (rec["agree"] and rec["stats_equal"]
                          and rec["structure_match"]) else "FLAG"
         emit(f"mesh_{name}", rec["mesh_wall_us"],
              f"local={rec['local_us']:.0f}us rel_err={rec['rel_err']:.1e} "
              f"{flags}")
+    if trace_dir:
+        from repro.obs import get_metrics, set_metrics
+        get_metrics().export(os.path.join(trace_dir, "mesh_metrics.json"))
+        set_metrics(None)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(record, f, indent=1, sort_keys=True)
     return record
 
 
-def run(json_path: str | None = None, smoke: bool = False) -> dict:
+def run(json_path: str | None = None, smoke: bool = False,
+        trace_dir: str | None = None) -> dict:
     """Entry point used by ``benchmarks.run``: respawns in a subprocess
     with forced host devices when this process is short of them."""
     import jax
     if len(jax.devices()) >= NODES:
-        return _run_inner(json_path, smoke)
+        return _run_inner(json_path, smoke, trace_dir=trace_dir)
     out_path = os.path.abspath(json_path) if json_path else \
         os.path.join(_ROOT, "BENCH_mesh.json")
     cmd = [sys.executable, "-m", "benchmarks.mesh_bench",
            "--json", out_path]
     if smoke:
         cmd.append("--smoke")
+    if trace_dir:
+        cmd += ["--trace-dir", os.path.abspath(trace_dir)]
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.pathsep.join(
@@ -183,4 +219,4 @@ def run(json_path: str | None = None, smoke: bool = False) -> dict:
 if __name__ == "__main__":
     argv = sys.argv[1:]
     run(json_path=json_arg(argv, default="BENCH_mesh.json"),
-        smoke="--smoke" in argv)
+        smoke="--smoke" in argv, trace_dir=trace_dir_arg(argv))

@@ -1,6 +1,8 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 # ``--json [PATH]`` additionally writes the search-time records to
 # BENCH_search.json (default) for the CI perf-trajectory artifact.
+# ``--trace-dir PATH`` captures Perfetto traces + metrics snapshots from
+# the mesh and churn benches into PATH (see repro.obs).
 from __future__ import annotations
 
 import sys
@@ -8,8 +10,9 @@ import sys
 
 def main(argv: list[str] | None = None) -> None:
     argv = sys.argv[1:] if argv is None else argv
-    from .common import json_arg
+    from .common import json_arg, trace_dir_arg
     json_path = json_arg(argv)
+    trace_dir = trace_dir_arg(argv)
 
     from . import (churn_bench, engine_comm, estimator_quality,
                    fig2_microbench, fig7_fig9_comparison, fig8_score,
@@ -30,10 +33,10 @@ def main(argv: list[str] | None = None) -> None:
     kernel_bench.run()
     # mesh executor vs single-process engine, reduced model set (full set
     # + JSON via benchmarks.mesh_bench --json; respawns with fake devices)
-    mesh_bench.run(smoke=True)
+    mesh_bench.run(smoke=True, trace_dir=trace_dir)
     # elastic-cluster churn replay: gated scenarios only (full scenario
     # set + JSON via benchmarks.churn_bench --full --json)
-    churn_bench.run(smoke=True)
+    churn_bench.run(smoke=True, trace_dir=trace_dir)
     # data-driven CE: small trace budget by default (full 330K via
     # benchmarks.estimator_quality --full)
     estimator_quality.run(n_samples=8_000, trees=40)

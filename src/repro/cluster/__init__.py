@@ -37,7 +37,8 @@ from .refine import (RefineOscillationError, RefineResult, RefineStep,
                      refine_with_simulator)
 from .serving import (ServingPoint, choose_batch, max_goodput, serve_point,
                       sweep_serving)
-from .simsched import SimReport, Stage, build_stages, simulate
+from .simsched import (SimReport, Stage, build_stages, export_sim_trace,
+                       simulate, simulate_trace)
 from .spec import (CLUSTER_PRESETS, ClusterSpec, DeviceSpec, LinkSpec,
                    asym_uplink, homogeneous, mixed_fast_slow, stepped,
                    topology_edges)
@@ -92,9 +93,9 @@ __all__ = [
     "ReplanDecision", "STRATEGIES", "ServingPoint", "SimReport", "Stage",
     "asym_uplink", "build_stages", "choose_batch",
     "cluster_pipeline_frontier", "cluster_plan_search",
-    "compare_strategies", "homogeneous", "max_goodput",
-    "migration_cost_s", "mixed_fast_slow", "plan_device_bytes",
-    "plan_memory_ok", "random_scenario", "refine_with_simulator",
-    "run_churn", "serve_point", "simulate", "stepped", "sweep_serving",
-    "topology_edges",
+    "compare_strategies", "export_sim_trace", "homogeneous",
+    "max_goodput", "migration_cost_s", "mixed_fast_slow",
+    "plan_device_bytes", "plan_memory_ok", "random_scenario",
+    "refine_with_simulator", "run_churn", "serve_point", "simulate",
+    "simulate_trace", "stepped", "sweep_serving", "topology_edges",
 ]

@@ -50,6 +50,7 @@ import numpy as np
 from repro.core.dpp import Objective
 from repro.core.graph import ModelGraph
 from repro.core.plan import Plan
+from repro.obs import trace as _obs_trace
 
 from .elastic import (CapacityError, DeviceRegistry, ElasticPlanner,
                       MembershipError)
@@ -490,6 +491,11 @@ def run_churn(graph: ModelGraph, cluster: ClusterSpec,
                 sig = None
             if sig != planned_sig and strategy != "never":
                 planned_sig = sig
+                # detection instant: the membership/capability change
+                # was noticed on this heartbeat tick (sim time in args)
+                _obs_trace.instant(_obs_trace.PLANNER_TRACK, "detect",
+                                   cat="planner", t_sim=t,
+                                   strategy=strategy)
                 begin_replan(t)
         elif kind == "stall_on":
             if payload == pending_id:

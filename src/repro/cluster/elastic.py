@@ -63,6 +63,9 @@ from repro.core.graph import ModelGraph
 from repro.core.partition import (ALL_SCHEMES, DTYPE_BYTES, Scheme,
                                   weighted_split_sizes)
 from repro.core.plan import Plan, plan_pipeline_cost
+from repro.obs import flight as _obs_flight
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 
 from .estimator import ClusterAnalyticEstimator
 from .spec import ClusterSpec, DeviceSpec, LinkSpec, topology_edges
@@ -622,40 +625,64 @@ class ElasticPlanner:
         an empty fleet)."""
         t0 = time.perf_counter()
         self.replans += 1
-        fr, reuse = self.frontier_for(cluster)
+        # replan breakdown spans (planner track): incremental frontier
+        # build -> feasible selection -> cutover (migration) scoring
+        with _obs_trace.span(_obs_trace.PLANNER_TRACK, "replan.frontier",
+                             cat="planner", graph=self.graph.name,
+                             devices=cluster.n) as sp:
+            fr, reuse = self.frontier_for(cluster)
+            sp.set(**{k: v for k, v in reuse.items() if k != "rescale"})
+        _obs_metrics.inc("replan.count", graph=self.graph.name)
+        for key, val in reuse.items():
+            if key == "rescale":
+                amt = 1.0 if val is not None else 0.0
+            elif isinstance(val, bool):
+                amt = 1.0 if val else 0.0
+            else:
+                amt = float(val)
+            _obs_metrics.inc("replan.reuse", amt, path=key)
         est = ClusterAnalyticEstimator(cluster, weighted=self.weighted)
         tb = cluster.compat_testbed()
-        best_i, best_plan = self._select_feasible(fr, cluster, objective,
-                                                  latency_bound_s)
+        with _obs_trace.span(_obs_trace.PLANNER_TRACK, "replan.select",
+                             cat="planner"):
+            best_i, best_plan = self._select_feasible(
+                fr, cluster, objective, latency_bound_s)
         a, b = float(fr.points[best_i, 0]), float(fr.points[best_i, 1])
         best_period = max(a, b)
 
-        keep_score: Optional[float] = None
-        if old_plan is not None:
-            # keep's period is re-costed on the NEW cluster — the old
-            # plan now runs on derated/survivor capabilities, not the
-            # rate it enjoyed when it was planned
-            pc = plan_pipeline_cost(self.graph, old_plan, est, tb)
-            keep_period = pc.bottleneck_s
-            keep_mig = migration_cost_s(
-                self.graph, old_plan, old_cluster, old_plan, cluster,
-                inflight=0, old_period_s=0.0)
-            keep_ok = (not self.enforce_memory
-                       or all(plan_memory_ok(self.graph, old_plan,
-                                             cluster)))
-            if keep_ok and consider_keep:
-                keep_score = (keep_mig.total_s
-                              + self.horizon_requests * keep_period)
+        with _obs_trace.span(_obs_trace.PLANNER_TRACK, "replan.cutover",
+                             cat="planner"):
+            keep_score: Optional[float] = None
+            if old_plan is not None:
+                # keep's period is re-costed on the NEW cluster — the
+                # old plan now runs on derated/survivor capabilities,
+                # not the rate it enjoyed when it was planned
+                pc = plan_pipeline_cost(self.graph, old_plan, est, tb)
+                keep_period = pc.bottleneck_s
+                keep_mig = migration_cost_s(
+                    self.graph, old_plan, old_cluster, old_plan, cluster,
+                    inflight=0, old_period_s=0.0)
+                keep_ok = (not self.enforce_memory
+                           or all(plan_memory_ok(self.graph, old_plan,
+                                                 cluster)))
+                if keep_ok and consider_keep:
+                    keep_score = (keep_mig.total_s
+                                  + self.horizon_requests * keep_period)
 
-        mig = migration_cost_s(
-            self.graph, old_plan, old_cluster, best_plan, cluster,
-            inflight=self.inflight,
-            old_period_s=0.0 if old_period_s is None else old_period_s)
-        move_score = mig.total_s + self.horizon_requests * best_period
+            mig = migration_cost_s(
+                self.graph, old_plan, old_cluster, best_plan, cluster,
+                inflight=self.inflight,
+                old_period_s=0.0 if old_period_s is None
+                else old_period_s)
+            move_score = mig.total_s + self.horizon_requests * best_period
 
         if (keep_score is not None and old_plan is not None
                 and keep_score <= move_score):
             wall = time.perf_counter() - t0
+            _obs_metrics.inc("replan.kept", graph=self.graph.name)
+            _obs_flight.get_flight().record(
+                "replan", graph=self.graph.name, kept=True,
+                wall_s=wall, period_s=keep_period)
             return ReplanDecision(
                 plan=old_plan, migrate=keep_mig.bytes_moved > 0.0,
                 period_s=keep_period, score_s=keep_score,
@@ -663,6 +690,10 @@ class ElasticPlanner:
                 plan_wall_s=wall, point_idx=None, frontier=fr,
                 reuse=reuse)
         wall = time.perf_counter() - t0
+        _obs_metrics.inc("replan.migrated", graph=self.graph.name)
+        _obs_flight.get_flight().record(
+            "replan", graph=self.graph.name, kept=False, wall_s=wall,
+            period_s=best_period)
         return ReplanDecision(
             plan=best_plan, migrate=True, period_s=best_period,
             score_s=move_score, migration=mig, keep_score_s=keep_score,

@@ -36,6 +36,8 @@ from repro.core.dpp import Objective, PlanFrontier, pipeline_frontier
 from repro.core.graph import ModelGraph
 from repro.core.partition import ALL_SCHEMES, Scheme
 from repro.core.plan import Plan
+from repro.obs import flight as _obs_flight
+from repro.obs import metrics as _obs_metrics
 
 from .estimator import ClusterAnalyticEstimator
 from .simsched import SimReport, simulate
@@ -151,6 +153,13 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
             converged = fixed_point and not last_failed
             if not fixed_point and on_oscillation == "raise":
                 cycle = [s.point_idx for s in steps] + [idx]
+                _obs_flight.get_flight().record(
+                    "refine_oscillation", graph=graph.name, cycle=cycle)
+                _obs_flight.dump_postmortem(
+                    "refine_oscillation",
+                    context={"graph": graph.name, "cycle": cycle,
+                             "beta": beta, "alpha": alpha,
+                             "iters": len(steps)})
                 raise RefineOscillationError(
                     f"refinement cycles over frontier points {cycle} "
                     f"without reaching a fixed point; pass "
@@ -184,6 +193,18 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
             point_idx=idx, compute_s=a, sync_s=b, beta=beta, alpha=alpha,
             sim_throughput_rps=rps, sim_period_s=period,
             dev_occupancy_s=dev_occ, link_occupancy_s=link_occ))
+        # per-iteration convergence gauges (no-ops unless a metrics
+        # registry is installed — see obs.metrics)
+        it = len(steps) - 1
+        _obs_metrics.gauge("refine.beta", beta, graph=graph.name)
+        _obs_metrics.gauge("refine.alpha", alpha, graph=graph.name)
+        _obs_metrics.gauge("refine.period_s", period, graph=graph.name)
+        _obs_metrics.observe("refine.throughput_rps", rps,
+                             graph=graph.name)
+        _obs_metrics.inc("refine.iterations", graph=graph.name)
+        _obs_flight.get_flight().record(
+            "refine_step", graph=graph.name, iter=it, point_idx=idx,
+            beta=beta, alpha=alpha, period_s=period, untrusted=failed)
         # an untrusted sample may only seed best (the assert below needs
         # one iterate) — it never displaces a trusted one
         if best is None or (not failed and rps > best[0]):

@@ -64,6 +64,12 @@ class SimReport:
     p99_latency_s: float
     device_busy_s: Tuple[float, ...]
     link_busy_s: Tuple[float, ...]
+    #: with ``record_timeline=True``: per-task ``(resource, request,
+    #: stage_idx, t_start_s, t_end_s)`` intervals (resource < n_dev is a
+    #: device, the rest are links) — the raw material for
+    #: :func:`export_sim_trace`
+    timeline: Optional[Tuple[Tuple[int, int, int, float, float], ...]] \
+        = dataclasses.field(default=None, compare=False)
 
     @property
     def device_utilization(self) -> Tuple[float, ...]:
@@ -182,7 +188,8 @@ def simulate(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
              n_requests: int = 1, arrival_period_s: float = 0.0,
              weighted: bool = True,
              warmup: Optional[int] = None,
-             batch_size: int = 1) -> SimReport:
+             batch_size: int = 1,
+             record_timeline: bool = False) -> SimReport:
     """Run ``n_requests`` through the plan's stage DAG on the cluster.
 
     ``arrival_period_s=0`` is the closed-loop saturation case (all requests
@@ -192,6 +199,9 @@ def simulate(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
     simulated request as a batch of that many user requests (compute and
     byte volumes scaled; reported latencies/throughput stay per *batch* —
     ``cluster.serving`` converts to per-request terms).
+    ``record_timeline=True`` additionally captures every task's
+    ``(resource, request, stage, start, end)`` interval in
+    ``SimReport.timeline`` for trace export.
     """
     stages = build_stages(graph, plan, cluster, weighted=weighted,
                           batch_size=batch_size)
@@ -225,6 +235,8 @@ def simulate(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
     done_t = np.full(n_requests, np.nan)
     events: List[Tuple[float, int, int, int, int, int]] = []
     seq = 0
+    started: Dict[int, float] = {}           # resource -> task start time
+    timeline: List[Tuple[int, int, int, float, float]] = []
 
     def stage_ready(t: float, r: int, si: int) -> None:
         st = stages[si]
@@ -241,6 +253,8 @@ def simulate(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
         r, si, dur = heapq.heappop(ready[res])
         busy[res] = True
         busy_total[res] += dur
+        if record_timeline:
+            started[res] = t
         seq += 1
         heapq.heappush(events, (t + dur, seq, 1, res, r, si))
 
@@ -265,6 +279,8 @@ def simulate(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
                 stage_ready(t, r, root)
         else:                    # task finish
             busy[res] = False
+            if record_timeline:
+                timeline.append((res, r, si, started.pop(res), t))
             task_left[r, si] -= 1
             if task_left[r, si] == 0:
                 stage_done(t, r, si)
@@ -292,4 +308,43 @@ def simulate(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
         p99_latency_s=float(np.percentile(lat, 99)),
         device_busy_s=tuple(busy_total[:n_dev]),
         link_busy_s=tuple(busy_total[n_dev:]),
+        timeline=tuple(timeline) if record_timeline else None,
     )
+
+
+def export_sim_trace(stages: List[Stage],
+                     timeline: Tuple[Tuple[int, int, int, float, float],
+                                     ...],
+                     n_dev: int, process: str = "simulated",
+                     pid: int = 2):
+    """Render a recorded simulator timeline as an ``obs.trace.Tracer``
+    in the **same schema the mesh executor emits**: one track per
+    device (``dev0..``) plus one per link (``link0..``), every task a
+    complete span named by its stage label with ``cat="stage"`` —
+    so the predicted timeline and a measured mesh trace land in one
+    Perfetto file and diff structurally (``obs.skew.diff_traces``)."""
+    from repro.obs.trace import STAGE_CAT, Tracer, device_track, \
+        link_track
+    tracer = Tracer(process=process, pid=pid)
+    for d in range(n_dev):
+        tracer.ensure_track(device_track(d))
+    for res, r, si, t0, t1 in timeline:
+        track = device_track(res) if res < n_dev \
+            else link_track(res - n_dev)
+        st = stages[si]
+        tracer.add_complete(track, st.label, t0 * 1e6,
+                            (t1 - t0) * 1e6, cat=STAGE_CAT,
+                            args={"kind": st.kind, "request": r})
+    return tracer
+
+
+def simulate_trace(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
+                   n_requests: int = 1, **kwargs):
+    """Simulate and export the predicted timeline in one call:
+    returns ``(SimReport, Tracer)`` (see :func:`export_sim_trace`)."""
+    stages = build_stages(graph, plan, cluster,
+                          weighted=kwargs.get("weighted", True),
+                          batch_size=kwargs.get("batch_size", 1))
+    rep = simulate(graph, plan, cluster, n_requests=n_requests,
+                   record_timeline=True, **kwargs)
+    return rep, export_sim_trace(stages, rep.timeline, cluster.n)

@@ -37,6 +37,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .cost import Testbed
+from repro.obs import metrics as _obs_metrics
+
 from .estimator import CostEstimator, i_features, s_features
 from .graph import LayerSpec, ModelGraph, halo_growth
 from .partition import ALL_SCHEMES, Scheme, min_shard_extent
@@ -73,6 +75,15 @@ class CostTableBuilder:
         self._i_factors: List[float] = []
         self._s_keys: Dict[tuple, int] = {}
         self._s_rows: List[List[float]] = []
+        # dedup accounting: a hit is a registered query that collapsed
+        # onto an existing row (plain ints here; pushed to the metrics
+        # registry in one batch by evaluate() — see obs.metrics)
+        self.i_hits = 0
+        self.i_misses = 0
+        self.s_hits = 0
+        self.s_misses = 0
+        self._pushed = {"i_hits": 0, "i_misses": 0,
+                        "s_hits": 0, "s_misses": 0}
         # geometric identity per layer *object* (pinned so ids stay unique):
         # both estimators read only feature_vector() (+ extra_flop_factor),
         # so name-blind keys make repeated blocks share one row
@@ -96,10 +107,13 @@ class CostTableBuilder:
         key = (self._lkey(layer), scheme, halo)
         idx = self._i_keys.get(key)
         if idx is None:
+            self.i_misses += 1
             idx = len(self._i_rows)
             self._i_keys[key] = idx
             self._i_rows.append(i_features(layer, scheme, self._tb, halo))
             self._i_factors.append(layer.extra_flop_factor)
+        else:
+            self.i_hits += 1
         return idx
 
     def s_index(self, layer: LayerSpec, nxt: Optional[LayerSpec],
@@ -108,9 +122,12 @@ class CostTableBuilder:
                None if nxt is None else (nxt.k, nxt.fan_in), src, dst)
         idx = self._s_keys.get(key)
         if idx is None:
+            self.s_misses += 1
             idx = len(self._s_rows)
             self._s_keys[key] = idx
             self._s_rows.append(s_features(layer, nxt, src, dst, self._tb))
+        else:
+            self.s_hits += 1
         return idx
 
     @property
@@ -152,6 +169,17 @@ class CostTableBuilder:
         elif len(svals) != len(self._s_rows):
             raise ValueError(f"cached svals cover {len(svals)} rows, "
                              f"builder has {len(self._s_rows)}")
+        # push dedup deltas since the previous evaluate() in one batch
+        # (re-evaluations of a long-lived builder don't double count)
+        for attr, name, table in (
+                ("i_hits", "cost_tables.dedup_hits", "i"),
+                ("i_misses", "cost_tables.dedup_misses", "i"),
+                ("s_hits", "cost_tables.dedup_hits", "s"),
+                ("s_misses", "cost_tables.dedup_misses", "s")):
+            delta = getattr(self, attr) - self._pushed[attr]
+            if delta:
+                _obs_metrics.inc(name, delta, table=table)
+                self._pushed[attr] = getattr(self, attr)
         return np.asarray(ivals, np.float64), np.asarray(svals, np.float64)
 
 
@@ -369,6 +397,11 @@ class PrefetchedEstimator:
         self._est = est
         self._i: Dict[tuple, float] = {}
         self._s: Dict[tuple, float] = {}
+        # plain-int hit/miss counters (the scalar path is called in the
+        # oracle's innermost loop — no registry indirection here; read
+        # them via cache_info() or push_metrics())
+        self.hits = 0
+        self.misses = 0
 
     @classmethod
     def for_graph(cls, graph: ModelGraph, est: CostEstimator, tb: Testbed,
@@ -429,8 +462,11 @@ class PrefetchedEstimator:
         key = _i_key(layer, scheme, extra_halo)
         hit = self._i.get(key)
         if hit is None:
+            self.misses += 1
             hit = self._est.i_cost(layer, scheme, tb, extra_halo=extra_halo)
             self._i[key] = hit
+        else:
+            self.hits += 1
         return hit
 
     def s_cost(self, layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
@@ -438,9 +474,22 @@ class PrefetchedEstimator:
         key = _s_key(layer, nxt, src, dst)
         hit = self._s.get(key)
         if hit is None:
+            self.misses += 1
             hit = self._est.s_cost(layer, nxt, src, dst, tb)
             self._s[key] = hit
+        else:
+            self.hits += 1
         return hit
+
+    def cache_info(self) -> Tuple[int, int]:
+        """(hits, misses) of the scalar lookup path."""
+        return (self.hits, self.misses)
+
+    def push_metrics(self) -> None:
+        """Batch the counters into the installed metrics registry (a
+        no-op without one)."""
+        _obs_metrics.inc("prefetch.hits", self.hits)
+        _obs_metrics.inc("prefetch.misses", self.misses)
 
     def i_cost_batch(self, X: np.ndarray, tb: Testbed,
                      flop_factor: Optional[np.ndarray] = None) -> np.ndarray:

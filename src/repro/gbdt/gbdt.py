@@ -77,12 +77,14 @@ class GBDTRegressor:
             pred += self.learning_rate * upd
             self.trees_.append(tree)
             if verbose_every and (t + 1) % verbose_every == 0:
-                msg = f"[gbdt] tree {t+1}: train_rmse={np.sqrt(np.mean((pred-y)**2)):.4f}"
+                from repro.obs.log import log
+                fields = {"tree": t + 1,
+                          "train_rmse": float(np.sqrt(np.mean((pred - y)**2)))}
                 if eval_set is not None:
                     ex, ey = eval_set
                     ep = self.predict(ex)
-                    msg += f" eval_rmse={np.sqrt(np.mean((ep-ey)**2)):.4f}"
-                print(msg)
+                    fields["eval_rmse"] = float(np.sqrt(np.mean((ep - ey)**2)))
+                log("gbdt.fit", **fields)
         return self
 
     # ---- batched forest inference -----------------------------------------

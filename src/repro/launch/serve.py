@@ -8,6 +8,8 @@ import argparse
 import sys
 import time
 
+from repro.obs.log import log
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -61,8 +63,8 @@ def main(argv=None) -> int:
         tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True)
     jax.block_until_ready(tok)
     td = time.time() - t0
-    print(f"{cfg.name} batch={B}: prefill {tp * 1e3:.0f}ms, "
-          f"decode {td * 1e3 / args.gen:.1f}ms/token")
+    log("serve.timing", arch=cfg.name, batch=B, prefill_ms=tp * 1e3,
+        decode_ms_per_token=td * 1e3 / args.gen)
     assert bool(jnp.isfinite(logits).all())
     return 0
 

@@ -14,6 +14,8 @@ import argparse
 import sys
 import time
 
+from repro.obs.log import log
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -49,7 +51,8 @@ def main(argv=None) -> int:
     key = jax.random.PRNGKey(0)
     params = model.init(key)
     n = sum(x.size for x in jax.tree.leaves(params))
-    print(f"{cfg.name}: {n / 1e6:.1f}M params, {len(jax.devices())} devices")
+    log("train.start", arch=cfg.name, params_m=n / 1e6,
+        devices=len(jax.devices()))
 
     ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=args.seq,
                             global_batch=args.batch, seed=0)
@@ -69,11 +72,11 @@ def main(argv=None) -> int:
                 (args.batch, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype))
         params, opt, m = step(params, opt, batch)
         if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
-            print(f"step {i:4d} loss={float(m['loss']):.4f} "
-                  f"({time.time() - t0:.1f}s)", flush=True)
+            log("train.step", step=i, loss=float(m["loss"]),
+                elapsed_s=time.time() - t0)
     if args.ckpt:
         save_pytree(params, args.ckpt)
-        print(f"checkpoint -> {args.ckpt}")
+        log("train.checkpoint", path=args.ckpt)
     return 0
 
 

@@ -276,8 +276,10 @@ class ExecStats:
         period is the busier class (the ``PipelineCost`` bottleneck
         semantics applied to measurements)."""
         if not self.stage_times:
-            raise ValueError("no measured stages — run the mesh executor "
-                             "with instrument=True")
+            raise ValueError(
+                "no measured stages — run with "
+                'run_partitioned(..., executor="mesh", instrument=True) '
+                "(only the mesh executor measures stage times)")
         per_dev: Dict[int, float] = {}
         sync = 0.0
         for st in self.stage_times:

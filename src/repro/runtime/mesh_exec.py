@@ -65,6 +65,8 @@ from repro.core.graph import LayerSpec, ModelGraph
 from repro.core.partition import DTYPE_BYTES, Scheme
 from repro.core.plan import Plan, steps_segments
 from repro.launch.mesh import make_nodes_mesh
+from repro.obs import flight as _obs_flight
+from repro.obs import trace as _obs_trace
 from repro.runtime.engine import (BACKENDS, ExecStats, Rect, StageTime,
                                   _apply_record_b, _merge_comm_bytes,
                                   _rect_elems, _rect_isect,
@@ -233,6 +235,11 @@ class _MeshRun:
         self.stage_timeout_s = stage_timeout_s
         self.stage_retries = stage_retries
         self.fault_hook = fault_hook
+        # observability: tracer is cached once (None = tracing off, the
+        # zero-overhead default); the flight ring is always on — deque
+        # appends never touch numerics, so runs stay bit-identical
+        self.tracer = _obs_trace.get_tracer()
+        self.flight = _obs_flight.get_flight()
         self.mesh_key = tuple(int(d.id) for d in mesh.devices.flat) \
             if mesh is not None else (0,)
         # The host ("cpu") platform executes dispatched modules on one
@@ -274,8 +281,14 @@ class _MeshRun:
         dispatch exception is re-attempted up to ``stage_retries`` times
         (each counted) before :class:`StageDispatchError`.  ``fault_hook``
         is a test seam called as ``(kind, label, attempt)`` before every
-        attempt — raising from it injects a deterministic fault."""
+        attempt — raising from it injects a deterministic fault.
+
+        Every dispatch rides the flight ring; terminal failures dump a
+        postmortem artifact (``obs.flight.dump_postmortem`` — a no-op
+        unless a postmortem directory is configured)."""
         attempt = 0
+        self.flight.record("stage_dispatch", stage_kind=kind,
+                           label=label)
         while True:
             try:
                 if self.fault_hook is not None:
@@ -283,17 +296,49 @@ class _MeshRun:
                 return self._execute(kind, label, fn, *args)
             except StageTimeoutError:
                 self.stats.timeouts += 1
+                self.flight.record("stage_timeout", stage_kind=kind,
+                                   label=label,
+                                   timeout_s=self.stage_timeout_s)
+                _obs_flight.dump_postmortem(
+                    "stage_timeout",
+                    context={"kind": kind, "label": label,
+                             "timeout_s": self.stage_timeout_s,
+                             "nodes": self.n, "attempt": attempt})
                 raise
-            except StageFailure:
+            except StageFailure as exc:
+                self.flight.record("stage_failure", stage_kind=kind,
+                                   label=label)
+                _obs_flight.dump_postmortem(
+                    "stage_failure",
+                    context={"kind": kind, "label": label,
+                             "nodes": self.n, "attempt": attempt,
+                             "error": repr(exc)})
                 raise
             except Exception as exc:
                 if attempt >= self.stage_retries:
+                    self.flight.record("stage_dispatch_error",
+                                       stage_kind=kind,
+                                       label=label, attempts=attempt + 1)
+                    _obs_flight.dump_postmortem(
+                        "stage_dispatch_error",
+                        context={"kind": kind, "label": label,
+                                 "nodes": self.n,
+                                 "attempts": attempt + 1,
+                                 "stage_retries": self.stage_retries,
+                                 "error": repr(exc)})
                     raise StageDispatchError(
                         f"mesh stage {label!r} failed after "
                         f"{attempt + 1} attempt(s) "
                         f"(stage_retries={self.stage_retries}): "
                         f"{exc!r}") from exc
                 self.stats.retries += 1
+                self.flight.record("stage_retry", stage_kind=kind,
+                                   label=label,
+                                   attempt=attempt)
+                if self.tracer is not None:
+                    self.tracer.instant(_obs_trace.CONTROL_TRACK,
+                                        f"retry:{label}", cat="retry",
+                                        attempt=attempt)
                 attempt += 1
 
     def _watched(self, label: str, body):
@@ -338,7 +383,9 @@ class _MeshRun:
             return self._watched(label, body) if timed else body()
 
         def body():
+            tr = self.tracer
             t0 = time.perf_counter()
+            t0_us = tr.now_us() if tr is not None else 0.0
             out = fn(*args)
             dev_done: Tuple[float, ...] = ()
             lead = out[0] if isinstance(out, (tuple, list)) else out
@@ -352,8 +399,20 @@ class _MeshRun:
                     done.append(time.perf_counter() - t0)
                 dev_done = tuple(done)
             jax.block_until_ready(out)
+            wall = time.perf_counter() - t0
             self.stats.stage_times.append(
-                StageTime(kind, label, time.perf_counter() - t0, dev_done))
+                StageTime(kind, label, wall, dev_done))
+            if tr is not None:
+                # one control-track stage span per StageTime row (the
+                # 1:1 contract), plus a per-device span bounded by each
+                # shard's completion time
+                tr.add_complete(_obs_trace.CONTROL_TRACK, label, t0_us,
+                                wall * 1e6, cat=_obs_trace.STAGE_CAT,
+                                args={"kind": kind})
+                for d, done_s in enumerate(dev_done):
+                    tr.add_complete(_obs_trace.device_track(d), label,
+                                    t0_us, done_s * 1e6, cat="device",
+                                    args={"kind": kind})
             return out
         return self._watched(label, body) if timed else body()
 
@@ -801,6 +860,8 @@ def _run_degraded(graph: ModelGraph, weights, x, plan: Plan, nodes: int,
     ``ExecStats.failure_count`` (and through it
     ``MeasuredOccupancy.failures``) records the degradation."""
     from repro.runtime import engine as _engine
+    _obs_flight.get_flight().record("fallback_local",
+                                    graph=graph.name, nodes=nodes)
     out, local_stats = _engine.run_partitioned(
         graph, weights, x, plan, nodes, backend=backend,
         executor="local")

@@ -26,6 +26,7 @@ Subprocess (8 fake devices, ``slow``):
   * the overlapped (double-buffered) halo path on an NT plan matches;
   * the refine loop closes against *measured* mesh occupancy.
 """
+import json
 import os
 import subprocess
 import sys
@@ -324,6 +325,115 @@ def test_to_occupancy_arithmetic():
     assert occ.link_occupancy_s == pytest.approx(0.15)
     assert occ.period_s == pytest.approx(0.6)
     assert occ.latency_s == pytest.approx(0.95)
+
+
+def test_to_occupancy_error_names_mesh_executor():
+    """The empty-stats message must tell the caller exactly which
+    executor/flag combination produces measured stages."""
+    with pytest.raises(ValueError, match=r'executor="mesh"'):
+        ExecStats().to_occupancy()
+
+
+# ---------------------------------------------------------------------------
+# observability: stage spans, postmortems, disabled-tracing contract
+# ---------------------------------------------------------------------------
+
+def test_stage_spans_match_stage_times_one_to_one():
+    """With a tracer installed, the control-track ``cat="stage"`` spans
+    are the observability mirror of ``ExecStats.stage_times``: same
+    count, same labels, same order, same kinds, same wall times."""
+    from repro.obs import CONTROL_TRACK, STAGE_CAT, Tracer, set_tracer
+
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+    tr = Tracer()
+    set_tracer(tr)
+    try:
+        _, s = run_partitioned(g, w, x, plan, nodes=1, executor="mesh",
+                               instrument=True)
+    finally:
+        set_tracer(None)
+    spans = tr.spans(cat=STAGE_CAT, track=CONTROL_TRACK)
+    assert len(spans) == len(s.stage_times) > 0
+    assert [sp["name"] for sp in spans] == \
+        [st.label for st in s.stage_times]
+    assert [sp["args"]["kind"] for sp in spans] == \
+        [st.kind for st in s.stage_times]
+    for sp, st in zip(spans, s.stage_times):
+        assert sp["dur"] == pytest.approx(st.wall_s * 1e6)
+    # per-device spans mirror the compute stages' completion tuples
+    # (empty here: the 1-node path measures no per-shard times)
+    n_dev_expected = sum(len(st.device_done_s) for st in s.stage_times)
+    assert len(tr.spans(cat="device")) == n_dev_expected
+
+
+def test_tracing_disabled_is_bit_identical():
+    """The default (no tracer) and traced runs agree bit-exactly on
+    outputs and on the ExecStats geometry contract — instrumentation
+    must never perturb the numerics."""
+    from repro.obs import Tracer, get_tracer, set_tracer
+
+    assert get_tracer() is None        # tier-1 default: tracing off
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+    ref, s_ref = run_partitioned(g, w, x, plan, nodes=1, executor="mesh",
+                                 instrument=True)
+    set_tracer(Tracer())
+    try:
+        out, s = run_partitioned(g, w, x, plan, nodes=1, executor="mesh",
+                                 instrument=True)
+    finally:
+        set_tracer(None)
+    assert float(jnp.max(jnp.abs(out - ref))) == 0.0
+    assert s == s_ref
+    assert [st.label for st in s.stage_times] == \
+        [st.label for st in s_ref.stage_times]
+
+
+def test_watchdog_timeout_dumps_postmortem(tmp_path):
+    """A tripped stage watchdog leaves a postmortem artifact carrying
+    the failing stage's span context (kind/label/timeout) and the
+    recent flight-ring events, including that stage's dispatch."""
+    from repro.obs import get_flight, set_postmortem_dir
+    from repro.runtime.mesh_exec import StageTimeoutError
+
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+    get_flight().clear()
+    set_postmortem_dir(str(tmp_path))
+    try:
+        with pytest.raises(StageTimeoutError):
+            run_partitioned(g, w, x, plan, nodes=1, executor="mesh",
+                            stage_timeout_s=1e-4)
+    finally:
+        set_postmortem_dir(None)
+    dumps = sorted(tmp_path.glob("postmortem-*-stage_timeout.json"))
+    assert len(dumps) == 1
+    doc = json.loads(dumps[0].read_text())
+    assert doc["reason"] == "stage_timeout"
+    ctx = doc["context"]
+    assert ctx["timeout_s"] == pytest.approx(1e-4)
+    assert ctx["kind"] in ("compute", "sync") and ctx["label"]
+    # the ring shows the failing stage being dispatched, then timing out
+    kinds = [(e["kind"], e.get("label")) for e in doc["events"]]
+    assert ("stage_dispatch", ctx["label"]) in kinds
+    assert ("stage_timeout", ctx["label"]) in kinds
+
+
+def test_no_postmortem_dir_means_no_artifact(tmp_path, monkeypatch):
+    """Without a configured directory the watchdog failure raises
+    exactly as before — no artifact side effects anywhere."""
+    from repro.obs import postmortem_dir
+    from repro.runtime.mesh_exec import StageTimeoutError
+
+    monkeypatch.delenv("REPRO_POSTMORTEM_DIR", raising=False)
+    assert postmortem_dir() is None
+    g, w, x = _model_io("mobilenet")
+    plan = Plan([(Scheme.INH, Mode.T)] * len(g))
+    with pytest.raises(StageTimeoutError):
+        run_partitioned(g, w, x, plan, nodes=1, executor="mesh",
+                        stage_timeout_s=1e-4)
+    assert list(tmp_path.glob("postmortem-*")) == []
 
 
 def test_validate_stage_decomposition_pure():
