@@ -28,6 +28,11 @@ Usage (what the CI jobs run)::
 simulator) — its timings are advisory on CPU (see ``noise_note`` in
 BENCH_mesh.json).
 
+``--kind decode`` gates only the decode-serving correctness flags
+(planner head-sharding, sharded-vs-single-device token identity on both
+executors and the pallas backend); timings are advisory for the same
+reason.
+
 ``--kind kernels`` additionally hard-fails on a flipped kernel
 ``conformant`` flag or a pallas/xla engine-equivalence (``agree`` /
 ``stats_equal``) flag — kernel drift is a correctness bug, not a perf
@@ -255,9 +260,50 @@ def check_churn(current: dict, baseline: dict, max_ratio: float,
     return bad
 
 
+def check_decode(current: dict, baseline: dict, max_ratio: float,
+                 min_us: float) -> List[str]:
+    """Decode-serving gate: the boolean flags are hard — the planner must
+    keep head-sharding decode (``head_sharded``) and sharded greedy decode
+    must stay token-for-token identical to the single-device oracle on the
+    local executor, the mesh executor and (full runs) the pallas backend.
+    ALL timings (tok/s, step us) are advisory — same CPU-fake-device
+    rationale as the mesh gate (see ``noise_note`` in BENCH_decode.json).
+    The committed baseline is the full spec×nodes grid; the per-push CI
+    job runs the smoke subset, so only the smoke cells are required —
+    any cell that IS present gates on its flags."""
+    bad: List[str] = []
+    required = {("tiny", "2"), ("tiny", "4")}
+    for spec, base_rows in baseline.get("specs", {}).items():
+        cur_rows = current.get("specs", {}).get(spec, {})
+        for nodes, rec in base_rows.items():
+            cur = cur_rows.get(nodes)
+            if cur is None:
+                if (spec, nodes) in required:
+                    bad.append(f"decode/{spec}/n{nodes}: missing from "
+                               f"current record")
+                continue
+            if not cur.get("head_sharded", False):
+                bad.append(f"decode/{spec}/n{nodes}: planner no longer "
+                           f"head-shards the decode graph "
+                           f"(schemes {cur.get('schemes')})")
+            if not cur.get("tokens_match_local", False):
+                bad.append(f"decode/{spec}/n{nodes}: sharded decode "
+                           f"tokens diverged from the single-device "
+                           f"oracle (local executor, rel_err "
+                           f"{cur.get('logits_rel_err')})")
+            if cur.get("tokens_match_mesh") is False:
+                bad.append(f"decode/{spec}/n{nodes}: sharded decode "
+                           f"tokens diverged on the mesh executor")
+            if rec.get("tokens_match_pallas") is not None \
+                    and cur.get("tokens_match_pallas") is False:
+                bad.append(f"decode/{spec}/n{nodes}: pallas decode "
+                           f"kernel tokens diverged")
+    return bad
+
+
 _CHECKERS = {"search": check_search, "sweep": check_sweep,
              "kernels": check_kernels, "mesh": check_mesh,
-             "churn": check_churn}
+             "churn": check_churn, "decode": check_decode}
 
 
 def main(argv: List[str] | None = None) -> int:

@@ -9,8 +9,8 @@ from repro.core.dpp import plan_search
 from repro.core.partition import Scheme
 from repro.core.plan import fixed_plan
 from repro.configs.edge_models import mobilenet_v1
-from repro.runtime.engine import (init_weights, run_partitioned,
-                                  run_reference)
+from repro.runtime.engine import init_weights, run_reference
+from repro.runtime.session import Session
 
 from .common import EST, emit, time_call
 
@@ -33,7 +33,7 @@ def run() -> None:
     import jax.numpy as jnp
     for name, plan in plans.items():
         us, (out, stats) = time_call(
-            lambda plan=plan: run_partitioned(g, ws, x, plan, 4), repeats=1)
+            lambda plan=plan: Session(g, ws, plan, 4).run(x), repeats=1)
         exact = float(jnp.max(jnp.abs(out - ref))) < 1e-4
         emit(f"engine/{name}", us,
              f"recv_KB={stats.bytes_received / 1e3:.1f};"

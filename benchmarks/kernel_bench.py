@@ -34,7 +34,8 @@ from repro.core.dpp import plan_search
 from repro.kernels.conv2d import conv2d_shard
 from repro.kernels.ops import matmul_tiled
 from repro.kernels.ref import conv2d_shard_ref, matmul_ref
-from repro.runtime.engine import init_weights, run_partitioned
+from repro.runtime.engine import init_weights
+from repro.runtime.session import ExecConfig, Session
 
 from .common import EST, emit, json_arg, time_call
 
@@ -123,8 +124,9 @@ def _bench_equiv(model: str, kw: dict) -> dict:
     l0 = g.layers[0]
     x = jax.random.normal(key, (l0.in_h, l0.in_w, l0.in_c))
     plan = plan_search(g, EST, Testbed(nodes=4, bandwidth_gbps=0.5)).plan
-    out_x, st_x = run_partitioned(g, ws, x, plan, 4, backend="xla")
-    out_p, st_p = run_partitioned(g, ws, x, plan, 4, backend="pallas")
+    out_x, st_x = Session(g, ws, plan, 4, ExecConfig(backend="xla")).run(x)
+    out_p, st_p = Session(g, ws, plan, 4,
+                          ExecConfig(backend="pallas")).run(x)
     err = _rel_err(out_p, out_x)
     return {
         "rel_err": err,

@@ -80,7 +80,8 @@ def _bench_model(name: str, trace_dir: str | None = None) -> dict:
     from repro.core.dpp import plan_search
     from repro.obs import Tracer, set_tracer, write_trace
     from repro.obs.skew import stage_skew
-    from repro.runtime.engine import init_weights, run_partitioned
+    from repro.runtime.engine import init_weights
+    from repro.runtime.session import ExecConfig, Session
     from repro.runtime.mesh_exec import validate_stage_decomposition
 
     from .common import EST, time_call
@@ -93,12 +94,14 @@ def _bench_model(name: str, trace_dir: str | None = None) -> dict:
     plan = plan_search(g, EST,
                        Testbed(nodes=NODES, bandwidth_gbps=0.5)).plan
 
+    local_sess = Session(g, w, plan, NODES)
     local_us, (ref, s_ref) = time_call(
-        lambda: run_partitioned(g, w, x, plan, nodes=NODES), repeats=2)
+        lambda: local_sess.run(x), repeats=2)
 
+    mesh_sess = Session(g, w, plan, NODES,
+                        ExecConfig(executor="mesh", instrument=True))
     def mesh_run():
-        return run_partitioned(g, w, x, plan, nodes=NODES,
-                               executor="mesh", instrument=True)
+        return mesh_sess.run(x)
     mesh_run()                                   # warm-up: compile
     mesh_us, (out, s_mesh) = time_call(mesh_run, repeats=2)
     occ = s_mesh.to_occupancy()
@@ -108,15 +111,14 @@ def _bench_model(name: str, trace_dir: str | None = None) -> dict:
 
     # staged (overlap=False) run against the simulator's stage DAG;
     # two runs so the measured one is warm (only the warm run is traced)
-    _, s_staged = run_partitioned(g, w, x, plan, nodes=NODES,
-                                  executor="mesh", instrument=True,
-                                  overlap=False)
+    staged_sess = Session(g, w, plan, NODES,
+                          ExecConfig(executor="mesh", instrument=True,
+                                     overlap=False))
+    _, s_staged = staged_sess.run(x)
     tr = Tracer() if trace_dir else None
     set_tracer(tr)
     try:
-        _, s_staged = run_partitioned(g, w, x, plan, nodes=NODES,
-                                      executor="mesh", instrument=True,
-                                      overlap=False)
+        _, s_staged = staged_sess.run(x)
     finally:
         set_tracer(None)
     cl = homogeneous(NODES, bandwidth_gbps=0.5)

@@ -14,10 +14,10 @@ def main(argv: list[str] | None = None) -> None:
     json_path = json_arg(argv)
     trace_dir = trace_dir_arg(argv)
 
-    from . import (churn_bench, engine_comm, estimator_quality,
-                   fig2_microbench, fig7_fig9_comparison, fig8_score,
-                   kernel_bench, mesh_bench, roofline_table, search_time,
-                   sweep, tpu_ce)
+    from . import (churn_bench, decode_bench, engine_comm,
+                   estimator_quality, fig2_microbench,
+                   fig7_fig9_comparison, fig8_score, kernel_bench,
+                   mesh_bench, roofline_table, search_time, sweep, tpu_ce)
     print("name,us_per_call,derived")
     fig2_microbench.run()
     fig7_fig9_comparison.run(4, "fig7")
@@ -37,6 +37,9 @@ def main(argv: list[str] | None = None) -> None:
     # elastic-cluster churn replay: gated scenarios only (full scenario
     # set + JSON via benchmarks.churn_bench --full --json)
     churn_bench.run(smoke=True, trace_dir=trace_dir)
+    # autoregressive decode: sharded-vs-oracle flags + tok/s, smoke grid
+    # (full spec x nodes grid + JSON via benchmarks.decode_bench --json)
+    decode_bench.run(smoke=True)
     # data-driven CE: small trace budget by default (full 330K via
     # benchmarks.estimator_quality --full)
     estimator_quality.run(n_samples=8_000, trees=40)

@@ -14,8 +14,8 @@ from repro.core import AnalyticEstimator, Testbed, chain
 from repro.core.baselines import all_solutions, performance_scores
 from repro.core.dpp import plan_search
 from repro.configs.edge_models import mobilenet_v1
-from repro.runtime.engine import (init_weights, run_partitioned,
-                                  run_reference)
+from repro.runtime.engine import init_weights, run_reference
+from repro.runtime.session import Session
 
 
 def main() -> None:
@@ -43,7 +43,7 @@ def main() -> None:
     ws = init_weights(g_small, key)
     x = jax.random.normal(key, (56, 56, 3))
     plan = plan_search(g_small, est, tb).plan
-    out, stats = run_partitioned(g_small, ws, x, plan, tb.nodes)
+    out, stats = Session(g_small, ws, plan, tb.nodes).run(x)
     ref = run_reference(g_small, ws, x)
     err = float(jnp.max(jnp.abs(out - ref)))
     print(f"  reassembly max|err| = {err:.2e}  "

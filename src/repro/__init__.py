@@ -1,0 +1,50 @@
+"""FlexPie reproduction: flexible combinatorial partition planning and
+distributed execution for edge inference.
+
+The curated surface — plan, then run:
+
+    from repro import (Testbed, plan_search, AnalyticEstimator,
+                       Session, ExecConfig, init_weights)
+
+    res = plan_search(graph, AnalyticEstimator(), Testbed(nodes=4))
+    out, stats = Session(graph, weights, res.plan, 4,
+                         ExecConfig(executor="mesh")).run(x)
+
+Autoregressive serving:
+
+    from repro import TransformerSpec, DecodeSession, plan_decode
+
+    spec = TransformerSpec(n_layers=2, d_model=256, n_heads=8, d_ff=1024)
+    plan = plan_decode(spec, kv_len=2048, nodes=4).plan
+    session = DecodeSession(spec, weights, plan, 4)
+
+Deeper layers (cost physics, GBDT estimators, cluster simulator, elastic
+replanning, observability) stay importable from their subpackages:
+``repro.core``, ``repro.cluster``, ``repro.runtime``, ``repro.kernels``,
+``repro.obs``, ``repro.launch``, ``repro.configs``.
+"""
+from repro.core import (AnalyticEstimator, ConvT, LayerSpec, Mode,
+                        ModelGraph, Objective, Plan, Scheme, SearchResult,
+                        Testbed, Topology, chain, fixed_plan, plan_search)
+from repro.cluster import (ClusterSpec, cluster_plan_search, homogeneous,
+                           mixed_fast_slow)
+from repro.runtime import (DecodeSession, ExecConfig, ExecStats,
+                           PagedKVCache, Session, TransformerSpec,
+                           decode_graph, greedy_decode, init_transformer,
+                           init_weights, plan_decode, prefill_graph,
+                           reference_decode, run_reference)
+
+__all__ = [
+    # planning
+    "AnalyticEstimator", "ConvT", "LayerSpec", "Mode", "ModelGraph",
+    "Objective", "Plan", "Scheme", "SearchResult", "Testbed", "Topology",
+    "chain", "fixed_plan", "plan_search",
+    # clusters
+    "ClusterSpec", "cluster_plan_search", "homogeneous", "mixed_fast_slow",
+    # execution
+    "ExecConfig", "Session", "ExecStats", "init_weights", "run_reference",
+    # autoregressive serving
+    "DecodeSession", "TransformerSpec", "PagedKVCache", "decode_graph",
+    "prefill_graph", "init_transformer", "reference_decode",
+    "greedy_decode", "plan_decode",
+]

@@ -35,8 +35,9 @@ from .elastic import (CapacityError, DeviceRegistry, DeviceState,
 from .estimator import ClusterAnalyticEstimator
 from .refine import (RefineOscillationError, RefineResult, RefineStep,
                      refine_with_simulator)
-from .serving import (ServingPoint, choose_batch, max_goodput, serve_point,
-                      sweep_serving)
+from .serving import (DecodeServingReport, ServingPoint, choose_batch,
+                      max_goodput, plan_decode_serving, serve_decode,
+                      serve_point, sweep_serving)
 from .simsched import (SimReport, Stage, build_stages, export_sim_trace,
                        simulate, simulate_trace)
 from .spec import (CLUSTER_PRESETS, ClusterSpec, DeviceSpec, LinkSpec,
@@ -95,6 +96,7 @@ __all__ = [
     "cluster_pipeline_frontier", "cluster_plan_search",
     "compare_strategies", "export_sim_trace", "homogeneous",
     "max_goodput", "migration_cost_s", "mixed_fast_slow",
+    "DecodeServingReport", "plan_decode_serving", "serve_decode",
     "plan_device_bytes", "plan_memory_ok", "random_scenario",
     "refine_with_simulator", "run_churn", "serve_point", "simulate",
     "simulate_trace", "stepped", "sweep_serving", "topology_edges",

@@ -132,6 +132,107 @@ def sweep_serving(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
     return rows
 
 
+@dataclasses.dataclass(frozen=True)
+class DecodeServingReport:
+    """Continuous-batching decode serving at one operating point."""
+
+    prefill_s: float           # one prompt pass (planned prefill graph)
+    decode_step_s: float       # one token step for the whole batch
+    tokens_per_s: float        # generated tokens / makespan
+    p50_latency_s: float       # per-request: arrival -> last token
+    p99_latency_s: float
+    mean_batch: float          # decode-batch occupancy over all steps
+    makespan_s: float
+    n_requests: int
+    prefill_schemes: Tuple[str, ...]
+    decode_schemes: Tuple[str, ...]
+
+
+def plan_decode_serving(spec, cluster: ClusterSpec, prompt_len: int,
+                        n_new: int, weighted: bool = True):
+    """Split planning for autoregressive serving: one searched plan for
+    the compute-bound prefill pass (``seq_len`` queries) and a separate
+    one for the latency-bound decode step (one query against the full
+    KV length).  The two phases have opposite arithmetic intensity, so a
+    single plan systematically mis-serves one of them — this is the
+    prefill/decode split every LLM-serving stack performs.  Returns the
+    ``(prefill, decode)`` :class:`SearchResult` pair."""
+    from repro.cluster import cluster_plan_search
+    from repro.runtime.decode import decode_graph, prefill_graph
+    pre = cluster_plan_search(prefill_graph(spec, prompt_len), cluster,
+                              weighted=weighted)
+    dec = cluster_plan_search(decode_graph(spec, prompt_len + n_new),
+                              cluster, weighted=weighted)
+    return pre, dec
+
+
+def serve_decode(spec, cluster: ClusterSpec, *, prompt_len: int,
+                 n_new: int, arrival_rate_rps: float, n_requests: int = 32,
+                 max_batch: int = 8,
+                 weighted: bool = True) -> DecodeServingReport:
+    """Continuous decode-step batching over the prefill/decode split.
+
+    Deterministic event loop (evenly-paced arrivals at
+    ``arrival_rate_rps``): a request is prefilled as soon as the decode
+    batch has a free slot — prefill blocks the batch for one
+    ``prefill_s`` pass (prefill-priority admission) — then joins the
+    running batch, where every decode step emits one token for *all*
+    active requests and completed requests leave immediately.  This is
+    the vLLM-style iteration-level scheduling policy: no request waits
+    for a batch-mate to finish its full generation.  Step times come
+    from the split plans of :func:`plan_decode_serving`; a decode step
+    is priced independently of batch occupancy (decode is
+    bandwidth-bound on the weights, which are read once per step
+    regardless of batch size — the standard continuous-batching
+    economy)."""
+    if arrival_rate_rps <= 0.0:
+        raise ValueError("arrival rate must be positive")
+    if n_requests < 1 or n_new < 1 or max_batch < 1:
+        raise ValueError(f"bad decode serving point: n_requests="
+                         f"{n_requests}, n_new={n_new}, "
+                         f"max_batch={max_batch}")
+    pre, dec = plan_decode_serving(spec, cluster, prompt_len, n_new,
+                                   weighted)
+    prefill_s, decode_s = pre.cost, dec.cost
+    arrivals = [i / arrival_rate_rps for i in range(n_requests)]
+    waiting: List[int] = []
+    active: dict = {}
+    latencies = [0.0] * n_requests
+    t, nxt, done, tokens = 0.0, 0, 0, 0
+    occupancy: List[int] = []
+    while done < n_requests:
+        while nxt < n_requests and arrivals[nxt] <= t + 1e-12:
+            waiting.append(nxt)
+            nxt += 1
+        if not active and not waiting:
+            t = arrivals[nxt]           # idle until the next arrival
+            continue
+        if waiting and len(active) < max_batch:
+            r = waiting.pop(0)
+            t += prefill_s
+            active[r] = n_new
+            continue
+        occupancy.append(len(active))
+        t += decode_s
+        tokens += len(active)
+        for r in list(active):
+            active[r] -= 1
+            if active[r] == 0:
+                del active[r]
+                latencies[r] = t - arrivals[r]
+                done += 1
+    import numpy as np
+    return DecodeServingReport(
+        prefill_s=prefill_s, decode_step_s=decode_s,
+        tokens_per_s=tokens / t,
+        p50_latency_s=float(np.percentile(latencies, 50)),
+        p99_latency_s=float(np.percentile(latencies, 99)),
+        mean_batch=float(np.mean(occupancy)) if occupancy else 0.0,
+        makespan_s=t, n_requests=n_requests,
+        prefill_schemes=tuple(s.name for s, _ in pre.plan.steps),
+        decode_schemes=tuple(s.name for s, _ in dec.plan.steps))
+
+
 def max_goodput(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
                 arrival_rates_rps: Sequence[float], p99_bound_s: float,
                 batch_sizes: Sequence[int] = (1, 2, 4, 8),

@@ -94,6 +94,12 @@ def sync_bytes_messages(layer: LayerSpec, nxt: Optional[LayerSpec],
     if nxt is None or dst is None:
         total = layer.out_elems() * 4.0
         return total * (nodes - 1) / nodes, nodes - 1
+    if nxt.conv_t == ConvT.ATTN and dst.spatial:
+        # attention reads the whole sequence (every position is KV for every
+        # query), so a sequence-sharded successor still needs the full input:
+        # all-gather, regardless of how src and dst layouts relate.
+        total = layer.out_elems() * 4.0
+        return total * (nodes - 1) / nodes, 2 * (nodes - 1)
     if src == dst and src.spatial:
         b = boundary_bytes_same_scheme(layer, nxt, src, nodes)
         return b, 2 if b else 0
@@ -163,7 +169,7 @@ def hetero_compute_time_batch_s(X: np.ndarray, tb: Testbed,
                                 weights: np.ndarray,
                                 flop_factor: Optional[np.ndarray] = None
                                 ) -> np.ndarray:
-    """Vector form of :func:`hetero_compute_time_s` over an ``(n, 16)``
+    """Vector form of :func:`hetero_compute_time_s` over an ``(n, 17)``
     i-feature matrix with one fixed cluster.  Float expressions mirror the
     scalar op order, so any row bit-matches the scalar call."""
     X = np.asarray(X, np.float64)
@@ -178,7 +184,8 @@ def hetero_compute_time_batch_s(X: np.ndarray, tb: Testbed,
     per = conv_flops_per_elem_batch(conv_t, X[:, _F_IN_C], X[:, _F_K],
                                     X[:, _F_FAN_IN])
     flops = hetero_flops_batch(per, oh, ow, oc, scheme, halo, factor,
-                               np.asarray(weights, np.float64))
+                               np.asarray(weights, np.float64),
+                               heads=X[:, _F_HEADS].astype(np.int64))
     eff = np.asarray([tb.eff_inh, tb.eff_inw, tb.eff_outc,
                       tb.eff_grid])[scheme]
     for ct, derate in _CONV_T_DERATE.items():
@@ -201,11 +208,11 @@ def hetero_compute_time_batch_s(X: np.ndarray, tb: Testbed,
 
 # shared leading columns of both feature layouts
 (_F_IN_H, _F_IN_W, _F_IN_C, _F_OUT_H, _F_OUT_W, _F_OUT_C, _F_K, _F_S, _F_P,
- _F_CONV_T, _F_FAN_IN, _F_BW, _F_TOPO, _F_NODES) = range(14)
+ _F_CONV_T, _F_FAN_IN, _F_HEADS, _F_BW, _F_TOPO, _F_NODES) = range(15)
 # i-feature tail
-_F_SCHEME, _F_HALO = 14, 15
+_F_SCHEME, _F_HALO = 15, 16
 # s-feature tail
-_F_SRC, _F_DST, _F_NEXT_K, _F_NEXT_FAN = 14, 15, 16, 17
+_F_SRC, _F_DST, _F_NEXT_K, _F_NEXT_FAN, _F_NEXT_CONV_T = 15, 16, 17, 18, 19
 
 _TOPO_FACTORS = np.asarray([_TOPO_FACTOR[t] for t in Topology])
 
@@ -223,7 +230,7 @@ def _comm_time_batch(tb: Testbed, bytes_busiest: np.ndarray,
 def compute_time_batch_s(X: np.ndarray, tb: Testbed,
                          flop_factor: Optional[np.ndarray] = None
                          ) -> np.ndarray:
-    """Vector form of :func:`compute_time_s` over an ``(n, 16)`` i-feature
+    """Vector form of :func:`compute_time_s` over an ``(n, 17)`` i-feature
     matrix.  ``flop_factor`` carries ``LayerSpec.extra_flop_factor`` (not
     part of the learned feature expression; defaults to 1)."""
     X = np.asarray(X, np.float64)
@@ -239,7 +246,8 @@ def compute_time_batch_s(X: np.ndarray, tb: Testbed,
     per = conv_flops_per_elem_batch(conv_t, X[:, _F_IN_C], X[:, _F_K],
                                     X[:, _F_FAN_IN])
     work = straggler_flops_batch(per, oh, ow, oc, scheme, nodes, halo,
-                                 factor)
+                                 factor,
+                                 heads=X[:, _F_HEADS].astype(np.int64))
     eff = np.asarray([tb.eff_inh, tb.eff_inw, tb.eff_outc,
                       tb.eff_grid])[scheme]
     for ct, derate in _CONV_T_DERATE.items():
@@ -248,7 +256,7 @@ def compute_time_batch_s(X: np.ndarray, tb: Testbed,
 
 
 def sync_time_batch_s(X: np.ndarray, tb: Testbed) -> np.ndarray:
-    """Vector form of :func:`sync_time_s` over an ``(n, 18)`` s-feature
+    """Vector form of :func:`sync_time_s` over an ``(n, 20)`` s-feature
     matrix (``Dst = -1`` encodes the final gather-to-root)."""
     X = np.asarray(X, np.float64)
     oh = X[:, _F_OUT_H].astype(np.int64)
@@ -258,6 +266,7 @@ def sync_time_batch_s(X: np.ndarray, tb: Testbed) -> np.ndarray:
     src = X[:, _F_SRC].astype(np.int64)
     dst = X[:, _F_DST].astype(np.int64)
     next_k = X[:, _F_NEXT_K].astype(np.int64)
+    next_conv_t = X[:, _F_NEXT_CONV_T].astype(np.int64)
     topo = X[:, _F_TOPO].astype(np.int64)
     bw = X[:, _F_BW]
 
@@ -265,6 +274,7 @@ def sync_time_batch_s(X: np.ndarray, tb: Testbed) -> np.ndarray:
     src_spatial = src != Scheme.OUTC
     dst_spatial = (dst != Scheme.OUTC) & ~final
     same_spatial = (src == dst) & src_spatial
+    next_attn = (next_conv_t == ConvT.ATTN) & dst_spatial
 
     total = (oh * ow * oc) * 4.0
     gather_b = total * (nodes - 1) / nodes
@@ -277,9 +287,11 @@ def sync_time_batch_s(X: np.ndarray, tb: Testbed) -> np.ndarray:
         + np.where(dst_spatial, halo_dst, 0.0)
 
     bytes_b = np.where(final, gather_b,
-                       np.where(same_spatial, halo_src, relay_b))
+                       np.where(next_attn, gather_b,
+                                np.where(same_spatial, halo_src, relay_b)))
     msgs = np.where(final, nodes - 1,
-                    np.where(same_spatial,
-                             np.where(halo_src != 0.0, 2, 0),
-                             2 * (nodes - 1)))
+                    np.where(next_attn, 2 * (nodes - 1),
+                             np.where(same_spatial,
+                                      np.where(halo_src != 0.0, 2, 0),
+                                      2 * (nodes - 1))))
     return _comm_time_batch(tb, bytes_b, msgs, bw, topo)

@@ -54,8 +54,9 @@ def _i_key(layer: LayerSpec, scheme: Scheme, halo: int) -> tuple:
 def _s_key(layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
            dst: Optional[Scheme]) -> tuple:
     """Cache key of one scalar s-query: ``nxt`` enters only through
-    ``(k, fan_in)`` — all the feature expression reads from it."""
-    return (layer, None if nxt is None else (nxt.k, nxt.fan_in), src, dst)
+    ``(k, fan_in, conv_t)`` — all the feature expression reads from it."""
+    return (layer, None if nxt is None else (nxt.k, nxt.fan_in, nxt.conv_t),
+            src, dst)
 
 
 class CostTableBuilder:
@@ -119,7 +120,8 @@ class CostTableBuilder:
     def s_index(self, layer: LayerSpec, nxt: Optional[LayerSpec],
                 src: Scheme, dst: Optional[Scheme]) -> int:
         key = (self._lkey(layer),
-               None if nxt is None else (nxt.k, nxt.fan_in), src, dst)
+               None if nxt is None else (nxt.k, nxt.fan_in, nxt.conv_t),
+               src, dst)
         idx = self._s_keys.get(key)
         if idx is None:
             self.s_misses += 1

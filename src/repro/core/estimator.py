@@ -9,11 +9,12 @@ Two implementations:
   from-scratch histogram GBDT regressors (``repro/gbdt``) trained on traces
   sampled from the simulator (``repro/sim/trace.py``).  Predicts log-time.
 
-Feature expression (Fig. 4, extended with the planner's decision variables
-and the DAG fan-in so the estimators see merge structure):
-``[InH, InW, InC, OutH, OutW, OutC, K, S, P, ConvT, FanIn, bandwidth,
-topology]`` plus ``nodes, scheme, halo`` for i- and ``nodes, src, dst,
-next_K, next_fan_in`` for s-.
+Feature expression (Fig. 4, extended with the planner's decision variables,
+the DAG fan-in so the estimators see merge structure, and the ATTN head
+count so they see head-granular OutC geometry):
+``[InH, InW, InC, OutH, OutW, OutC, K, S, P, ConvT, FanIn, Heads,
+bandwidth, topology]`` plus ``nodes, scheme, halo`` for i- and ``nodes,
+src, dst, next_K, next_fan_in, next_conv_t`` for s-.
 """
 from __future__ import annotations
 
@@ -50,7 +51,7 @@ class BatchedCostEstimator(CostEstimator, Protocol):
     def i_cost_batch(self, X: np.ndarray, tb: Testbed,
                      flop_factor: Optional[np.ndarray] = None
                      ) -> np.ndarray:
-        """Vector i-Estimator over a stacked ``(n, 16)`` matrix of
+        """Vector i-Estimator over a stacked ``(n, 17)`` matrix of
         :func:`i_features` rows.  Row ``j`` must equal
         ``i_cost(layer_j, scheme_j, tb_j, halo_j)`` exactly.
         ``flop_factor`` carries ``extra_flop_factor`` per row for estimators
@@ -58,7 +59,7 @@ class BatchedCostEstimator(CostEstimator, Protocol):
         ...
 
     def s_cost_batch(self, X: np.ndarray, tb: Testbed) -> np.ndarray:
-        """Vector s-Estimator over stacked ``(n, 18)`` :func:`s_features`
+        """Vector s-Estimator over stacked ``(n, 20)`` :func:`s_features`
         rows (``Dst = -1`` marks the final gather)."""
         ...
 
@@ -99,14 +100,16 @@ def s_features(layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
             float(tb.nodes), float(src),
             -1.0 if dst is None else float(dst),
             0.0 if nxt is None else float(nxt.k),
-            0.0 if nxt is None else float(nxt.fan_in)]
+            0.0 if nxt is None else float(nxt.fan_in),
+            0.0 if nxt is None else float(nxt.conv_t)]
 
 
 I_FEATURE_NAMES = ["InH", "InW", "InC", "OutH", "OutW", "OutC", "K", "S", "P",
-                   "ConvT", "FanIn", "BW", "Topo", "Nodes", "Scheme", "Halo"]
+                   "ConvT", "FanIn", "Heads", "BW", "Topo", "Nodes", "Scheme",
+                   "Halo"]
 S_FEATURE_NAMES = ["InH", "InW", "InC", "OutH", "OutW", "OutC", "K", "S", "P",
-                   "ConvT", "FanIn", "BW", "Topo", "Nodes", "Src", "Dst",
-                   "NextK", "NextFanIn"]
+                   "ConvT", "FanIn", "Heads", "BW", "Topo", "Nodes", "Src",
+                   "Dst", "NextK", "NextFanIn", "NextConvT"]
 
 
 class GBDTEstimator:
@@ -131,8 +134,9 @@ class GBDTEstimator:
 
     def s_cost(self, layer: LayerSpec, nxt: Optional[LayerSpec], src: Scheme,
                dst: Optional[Scheme], tb: Testbed) -> float:
-        key = (layer, None if nxt is None else (nxt.k, nxt.fan_in), src, dst,
-               tb)
+        key = (layer,
+               None if nxt is None else (nxt.k, nxt.fan_in, nxt.conv_t),
+               src, dst, tb)
         hit = self._s_cache.get(key)
         if hit is None:
             x = np.asarray([s_features(layer, nxt, src, dst, tb)],

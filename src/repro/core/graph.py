@@ -33,10 +33,15 @@ class ConvT(enum.IntEnum):
     FC = 4            # fully connected / matmul (BERT, classifier heads)
     ADD = 5           # residual add (elementwise, multi-input merge)
     CONCAT = 6        # channel concatenation (Inception-style merge)
+    ATTN = 7          # fused attention block (QKV + scores + out proj)
+    FFN = 8           # fused transformer FFN (up proj + act + down proj)
 
 
 #: Layer types allowed to have fan-in >= 2.
 MERGE_TYPES = (ConvT.ADD, ConvT.CONCAT)
+
+#: Transformer block layer types (sequence lives in ``in_h``, like FC).
+ATTN_TYPES = (ConvT.ATTN, ConvT.FFN)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +60,16 @@ class LayerSpec:
     ``ADD`` inputs must agree on all dims, ``CONCAT`` inputs must agree
     spatially and their channels sum to ``in_c``.  :data:`GRAPH_INPUT`
     refers to the raw graph input (multi-tower models).
+
+    Transformer blocks follow the FC convention (``InH = seq_len``,
+    ``InW = 1``, ``K = S = 1, P = 0``): ``ATTN`` is a fused attention block
+    (pre-norm + QKV projections + scaled-dot-product attention + output
+    projection + residual) whose head count geometry lives in ``heads`` —
+    OutC partitions split at *head* granularity, never inside a head —
+    with the score/AV work (which scales with the attended KV length, not
+    a weight shape) folded into ``extra_flop_factor`` by the graph
+    builder.  ``FFN`` is the fused two-matmul MLP; its hidden width is
+    likewise folded (``extra_flop_factor = 2 * d_ff / d_model``).
     """
 
     name: str
@@ -68,6 +83,7 @@ class LayerSpec:
     p: int = 0
     extra_flop_factor: float = 1.0  # folds activations / attention scores
     inputs: Tuple[str, ...] = ()    # producer names; () = chain default
+    heads: int = 0                  # ATTN head count (0 = not an ATTN layer)
 
     @property
     def out_h(self) -> int:
@@ -99,6 +115,10 @@ class LayerSpec:
             f = max(1, self.fan_in - 1) * 1.0 * oh * ow * self.out_c
         elif self.conv_t == ConvT.CONCAT:
             f = 1.0 * oh * ow * self.out_c   # copy cost
+        elif self.conv_t in (ConvT.ATTN, ConvT.FFN):
+            # projection MACs; scores/AV (ATTN) and the hidden width (FFN)
+            # ride in extra_flop_factor (set by the graph builder)
+            f = 2.0 * self.in_h * self.in_c * self.out_c
         else:  # pragma: no cover - exhaustive enum
             raise ValueError(self.conv_t)
         return f * self.extra_flop_factor
@@ -116,17 +136,22 @@ class LayerSpec:
             return self.k * self.k * self.out_c
         if self.conv_t == ConvT.FC:
             return self.in_c * self.out_c
+        if self.conv_t == ConvT.ATTN:
+            return 4 * self.in_c * self.out_c   # wq, wk, wv, wo
+        if self.conv_t == ConvT.FFN:
+            # 2 * d * d_ff, recovered from the folded hidden-width factor
+            return int(self.in_c * self.out_c * self.extra_flop_factor)
         return 0
 
     def feature_vector(self) -> Tuple[float, ...]:
-        """Shape + structure part of the feature expression (11 values; see
+        """Shape + structure part of the feature expression (12 values; see
         ``I_FEATURE_NAMES``/``S_FEATURE_NAMES`` in ``core/estimator.py`` for
         the full i-/s-feature layouts these embed into)."""
         return (
             float(self.in_h), float(self.in_w), float(self.in_c),
             float(self.out_h), float(self.out_w), float(self.out_c),
             float(self.k), float(self.s), float(self.p), float(self.conv_t),
-            float(self.fan_in),
+            float(self.fan_in), float(self.heads),
         )
 
     def with_input(self, in_h: int, in_w: int) -> "LayerSpec":
@@ -245,6 +270,19 @@ class ModelGraph:
                 raise ValueError(
                     f"{self.name}: {l.name} ({l.conv_t.name}) has fan-in "
                     f"{len(ins)}; only ADD/CONCAT layers may merge")
+            if l.conv_t in ATTN_TYPES and (l.k, l.s, l.p) != (1, 1, 0):
+                raise ValueError(
+                    f"{self.name}: {l.name} ({l.conv_t.name}) must have "
+                    f"K=S=1, P=0 (sequence lives in InH)")
+            if l.conv_t == ConvT.ATTN:
+                if l.heads < 1 or l.out_c % l.heads:
+                    raise ValueError(
+                        f"{self.name}: ATTN {l.name} needs heads >= 1 "
+                        f"dividing out_c (heads={l.heads}, out_c={l.out_c})")
+            elif l.heads:
+                raise ValueError(
+                    f"{self.name}: {l.name} ({l.conv_t.name}) carries "
+                    f"heads={l.heads}; only ATTN layers have head geometry")
             if l.conv_t == ConvT.ADD and len(ins) >= 2:
                 for j in ins:
                     if pshape(j) != (l.in_h, l.in_w, l.in_c):
@@ -358,6 +396,11 @@ def halo_growth(layers: Sequence[LayerSpec], upto: int) -> List[int]:
     Standard receptive-field recurrence, applied backwards:
         need[m] = need[m+1] * S_{m+1} + (K_{m+1} - 1)   (in layer-m output rows)
     For FC/ADD/CONCAT layers K=S=1 so the halo never grows through them.
+    An ATTN layer attends over the whole sequence, so its receptive field
+    is the full ``in_h`` extent: fusing *into* attention means every shard
+    recomputes the entire prefix, and the recurrence charges exactly that
+    (the planner then prices NT-through-ATTN as full replication and puts a
+    T boundary there instead).
     ``layers`` is a chain (one branch of the DAG); NT fusion never crosses
     fork/merge junctions, so the recurrence stays 1-D.
     """
@@ -365,7 +408,8 @@ def halo_growth(layers: Sequence[LayerSpec], upto: int) -> List[int]:
     halo = [0] * n
     for m in range(upto - 1, -1, -1):
         nxt = layers[m + 1]
-        halo[m] = halo[m + 1] * nxt.s + (nxt.k - 1)
+        grow = nxt.in_h if nxt.conv_t == ConvT.ATTN else (nxt.k - 1)
+        halo[m] = halo[m + 1] * nxt.s + grow
     return halo
 
 

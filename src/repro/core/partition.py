@@ -116,6 +116,10 @@ def _conv_row_flops(layer: LayerSpec, out_rows: int, out_cols: int,
     elif layer.conv_t == ConvT.FC:
         # FC: "rows" = sequence positions, cols = 1
         per = 2.0 * layer.in_c
+    elif layer.conv_t in (ConvT.ATTN, ConvT.FFN):
+        # projection MACs; score/AV (ATTN) and hidden (FFN) work is linear
+        # in the owned output region and rides in extra_flop_factor
+        per = 2.0 * layer.in_c
     elif layer.conv_t == ConvT.ADD:
         per = float(max(1, layer.fan_in - 1))   # (fan_in - 1) adds per elem
     else:  # CONCAT: copy cost
@@ -149,7 +153,13 @@ def shard_work(layer: LayerSpec, scheme: Scheme, nodes: int,
             flops.append(_conv_row_flops(layer, oh, c, oc))
             obytes.append(oh * c * oc * DTYPE_BYTES)
     elif scheme == Scheme.OUTC:
-        for ch in split_sizes(oc, nodes):
+        if layer.heads:
+            # ATTN: shard at head granularity (a head's channels never split)
+            per_head = oc // layer.heads
+            chs = [h * per_head for h in split_sizes(layer.heads, nodes)]
+        else:
+            chs = split_sizes(oc, nodes)
+        for ch in chs:
             flops.append(_conv_row_flops(layer, oh, ow, ch))
             obytes.append(oh * ow * ch * DTYPE_BYTES)
     elif scheme == Scheme.GRID2D:
@@ -204,7 +214,13 @@ def hetero_shard_work(layer: LayerSpec, scheme: Scheme,
             flops.append(_conv_row_flops(layer, oh, c, oc))
             obytes.append(oh * c * oc * DTYPE_BYTES)
     elif scheme == Scheme.OUTC:
-        for ch in weighted_split_sizes(oc, weights):
+        if layer.heads:
+            per_head = oc // layer.heads
+            chs = [h * per_head
+                   for h in weighted_split_sizes(layer.heads, weights)]
+        else:
+            chs = weighted_split_sizes(oc, weights)
+        for ch in chs:
             flops.append(_conv_row_flops(layer, oh, ow, ch))
             obytes.append(oh * ow * ch * DTYPE_BYTES)
     else:  # pragma: no cover
@@ -280,7 +296,8 @@ def conv_flops_per_elem_batch(conv_t: np.ndarray, in_c: np.ndarray,
         [(conv_t == ConvT.CONV) | (conv_t == ConvT.POINTWISE),
          conv_t == ConvT.DWCONV,
          conv_t == ConvT.POOL,
-         conv_t == ConvT.FC,
+         (conv_t == ConvT.FC) | (conv_t == ConvT.ATTN)
+         | (conv_t == ConvT.FFN),
          conv_t == ConvT.ADD],
         [2.0 * in_c * k * k,
          2.0 * k * k,
@@ -294,16 +311,20 @@ def straggler_flops_batch(per_elem: np.ndarray, oh: np.ndarray,
                           ow: np.ndarray, oc: np.ndarray,
                           scheme: np.ndarray, nodes: np.ndarray,
                           halo: np.ndarray,
-                          flop_factor: np.ndarray) -> np.ndarray:
+                          flop_factor: np.ndarray,
+                          heads: np.ndarray = None) -> np.ndarray:
     """Vector form of ``shard_work(...).straggler_flops``.
 
     The 1-D schemes reduce to the ceil-shard in closed form (workload is
     monotone in shard extent, so the straggler is the first shard of the
     balanced split).  GRID2D replays the round-robin cell assignment per
-    distinct node count, accumulating cells in the scalar order.
+    distinct node count, accumulating cells in the scalar order.  Rows with
+    ``heads > 0`` (ATTN layers) split OutC at head granularity.
     """
     if np.any((halo > 0) & (scheme == Scheme.OUTC)):
         raise ValueError("NT halo is undefined for OutC partition")
+    if heads is None:
+        heads = np.zeros(per_elem.shape, np.int64)
     out = np.empty(per_elem.shape, np.float64)
 
     m = scheme == Scheme.INH
@@ -316,7 +337,10 @@ def straggler_flops_batch(per_elem: np.ndarray, oh: np.ndarray,
         out[m] = per_elem[m] * oh[m] * c * oc[m] * flop_factor[m]
     m = scheme == Scheme.OUTC
     if m.any():
-        ch = ceil_div_batch(oc[m], nodes[m])
+        h = np.maximum(heads[m], 1)
+        ch = np.where(heads[m] > 0,
+                      ceil_div_batch(h, nodes[m]) * (oc[m] // h),
+                      ceil_div_batch(oc[m], nodes[m]))
         out[m] = per_elem[m] * oh[m] * ow[m] * ch * flop_factor[m]
     gmask = scheme == Scheme.GRID2D
     for nval in np.unique(nodes[gmask]) if gmask.any() else ():
@@ -361,14 +385,18 @@ def weighted_split_batch(total: np.ndarray,
 def hetero_flops_batch(per_elem: np.ndarray, oh: np.ndarray, ow: np.ndarray,
                        oc: np.ndarray, scheme: np.ndarray, halo: np.ndarray,
                        flop_factor: np.ndarray,
-                       weights: np.ndarray) -> np.ndarray:
+                       weights: np.ndarray,
+                       heads: np.ndarray = None) -> np.ndarray:
     """Vector form of ``hetero_shard_work(...).flops_per_node`` over stacked
     feature columns: returns the full ``(n_rows, n_devices)`` per-device
     FLOP matrix (the cost model divides by per-device speeds and takes the
     straggler max).  Expression order mirrors the scalar path so uniform
-    weights stay bit-identical to :func:`straggler_flops_batch`."""
+    weights stay bit-identical to :func:`straggler_flops_batch`.  Rows with
+    ``heads > 0`` (ATTN layers) split OutC at head granularity."""
     if np.any((halo > 0) & (scheme == Scheme.OUTC)):
         raise ValueError("NT halo is undefined for OutC partition")
+    if heads is None:
+        heads = np.zeros(per_elem.shape, np.int64)
     ndev = len(weights)
     out = np.empty((len(per_elem), ndev), np.float64)
 
@@ -391,7 +419,9 @@ def hetero_flops_batch(per_elem: np.ndarray, oh: np.ndarray, ow: np.ndarray,
             * oc[m][:, None] * flop_factor[m][:, None]
     m = scheme == Scheme.OUTC
     if m.any():
-        ch = _oned(m, oc, False)
+        h = np.maximum(heads[m], 1)
+        ch_head = weighted_split_batch(h, weights) * (oc[m] // h)[:, None]
+        ch = np.where((heads[m] > 0)[:, None], ch_head, _oned(m, oc, False))
         out[m] = per_elem[m][:, None] * oh[m][:, None] * ow[m][:, None] \
             * ch * flop_factor[m][:, None]
     m = scheme == Scheme.GRID2D

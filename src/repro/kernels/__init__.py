@@ -6,9 +6,11 @@ XLA fallback on unsupported geometries), the raw shard kernel
 ``backend="pallas"`` path, and the jnp oracles in :mod:`repro.kernels.ref`.
 """
 from .conv2d import UnsupportedGeometry, conv2d_shard, conv2d_tiled
+from .flash_attention import flash_decode_paged
 from .ops import conv2d, dwconv2d, flash_attention, matmul, matmul_tiled
 
 __all__ = [
     "UnsupportedGeometry", "conv2d", "conv2d_shard", "conv2d_tiled",
-    "dwconv2d", "flash_attention", "matmul", "matmul_tiled",
+    "dwconv2d", "flash_attention", "flash_decode_paged", "matmul",
+    "matmul_tiled",
 ]

@@ -1,0 +1,28 @@
+"""Execution runtime: the consolidated Session API, decode serving
+primitives, and the underlying executors.
+
+Public surface:
+
+* :class:`ExecConfig` / :class:`Session` — how to run a plan (policy) and
+  a plan bound for repeated execution (state).  This is the front door;
+  ``engine.run_partitioned`` is a deprecated shim over it.
+* :class:`DecodeSession` + :class:`TransformerSpec` and the decode-graph
+  helpers — autoregressive transformer decode with the distributed paged
+  KV cache.
+* :class:`PagedKVCache` — head-owner page placement for decode.
+* ``init_weights`` / ``run_reference`` / :class:`ExecStats` — model
+  setup and the unpartitioned oracle from the engine.
+"""
+from .engine import ExecStats, init_weights, run_reference
+from .session import ExecConfig, Session
+from .kv_cache import PagedKVCache
+from .decode import (DecodeSession, TransformerSpec, decode_graph,
+                     greedy_decode, init_transformer, plan_decode,
+                     prefill_graph, reference_decode)
+
+__all__ = [
+    "ExecConfig", "Session", "ExecStats", "init_weights", "run_reference",
+    "PagedKVCache", "DecodeSession", "TransformerSpec", "decode_graph",
+    "prefill_graph", "init_transformer", "reference_decode",
+    "greedy_decode", "plan_decode",
+]

@@ -572,43 +572,44 @@ def run_partitioned(graph: ModelGraph, weights, x: jnp.ndarray, plan: Plan,
                     stage_retries: int = 0,
                     fallback: str = "raise"
                     ) -> Tuple[jnp.ndarray, ExecStats]:
-    """Execute ``plan`` on ``nodes`` simulated devices.  ``jit_segments``
-    routes each segment cell through the compiled-program cache (repeated
-    blocks compile once and reuse across calls); ``False`` keeps the
-    historical eager path.  ``backend`` selects the segment-layer lowering:
-    ``"xla"`` (generic ``conv_general_dilated``) or ``"pallas"`` (shard
-    kernels with automatic per-record XLA fallback); stats accounting is
-    backend-independent by construction.
+    """Deprecated kwarg-sprawl entry point — use
+    :class:`repro.runtime.session.Session` with
+    :class:`repro.runtime.session.ExecConfig`.
 
-    ``executor="mesh"`` places each planned node's shard programs on its
-    own JAX device (``repro.runtime.mesh_exec``): halo rows arrive via
-    ``ppermute`` neighbor exchange, merge/scheme-change re-layouts via
-    ``all_gather`` — instead of host-side slicing.  ``mesh`` passes a
-    prebuilt 1-D ``nodes`` mesh (default: ``launch.mesh.make_nodes_mesh``);
-    ``instrument=True`` blocks per pipeline stage and records measured
-    ``StageTime`` rows into the stats; ``overlap=False`` keeps boundary
-    exchanges as their own dispatches (1:1 with the ``simsched`` stage
-    DAG) instead of fusing them into the consuming compute stage.
-    ``jit_segments`` is ignored by the mesh executor (always compiled).
+    Equivalent to ``Session(graph, weights, plan, nodes,
+    ExecConfig(backend=..., executor=..., ...), mesh=mesh).run(x)``;
+    kept as a thin shim so existing callers keep working, at the cost of
+    rebuilding the Session (and, for the mesh executor, re-deriving the
+    mesh) on every call."""
+    import warnings
+    warnings.warn(
+        "run_partitioned is deprecated; build a repro.runtime.session."
+        "Session with an ExecConfig and call session.run(x)",
+        DeprecationWarning, stacklevel=2)
+    from repro.runtime.session import ExecConfig, Session
+    cfg = ExecConfig(backend=backend, executor=executor,
+                     jit_segments=jit_segments, instrument=instrument,
+                     overlap=overlap, stage_timeout_s=stage_timeout_s,
+                     stage_retries=stage_retries, fallback=fallback)
+    return Session(graph, weights, plan, nodes, cfg, mesh=mesh).run(x)
 
-    Fault handling (mesh executor only): ``stage_timeout_s`` arms a
-    per-stage watchdog, ``stage_retries`` bounds dispatch re-attempts,
-    and ``fallback="local"`` degrades to this single-process executor
-    when the mesh has fewer live devices than the plan or a stage fails
-    terminally (``ExecStats.retries/timeouts/fallbacks`` record what
-    happened)."""
+
+def _run_partitioned_local(graph: ModelGraph, weights, x: jnp.ndarray,
+                           plan: Plan, nodes: int,
+                           jit_segments: bool = True,
+                           backend: str = "xla"
+                           ) -> Tuple[jnp.ndarray, ExecStats]:
+    """Execute ``plan`` on ``nodes`` simulated devices in-process (the
+    ``executor="local"`` path behind :class:`~repro.runtime.session.
+    Session`).  ``jit_segments`` routes each segment cell through the
+    compiled-program cache (repeated blocks compile once and reuse across
+    calls); ``False`` keeps the historical eager path.  ``backend``
+    selects the segment-layer lowering: ``"xla"`` (generic
+    ``conv_general_dilated``) or ``"pallas"`` (shard kernels with
+    automatic per-record XLA fallback); stats accounting is
+    backend-independent by construction."""
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
-    if executor not in EXECUTORS:
-        raise ValueError(f"executor {executor!r} not in {EXECUTORS}")
-    if executor == "mesh":
-        from repro.runtime.mesh_exec import run_partitioned_mesh
-        return run_partitioned_mesh(graph, weights, x, plan, nodes,
-                                    backend=backend, mesh=mesh,
-                                    instrument=instrument, overlap=overlap,
-                                    stage_timeout_s=stage_timeout_s,
-                                    stage_retries=stage_retries,
-                                    fallback=fallback)
     stats = ExecStats()
     if graph.is_chain:
         plan.validate()

@@ -1,0 +1,140 @@
+"""Distributed paged KV cache for autoregressive decode.
+
+Pages live on the devices that own the heads: each (layer, node) keeps its
+own physical page pool holding exactly that node's kv heads — the node that
+computes a head's attention is the node whose pool stores that head's K/V,
+so decode steps touch no remote KV at all (only the tiny head-output
+gather at the output projection crosses the interconnect).
+
+A single logical→physical page table is shared by every pool: logical page
+``i`` (token positions ``i*page_size .. (i+1)*page_size - 1``) maps to the
+physical slot ``page_table[i]``.  Physical slots are assigned in a
+deterministic *scrambled* order (seeded permutation) so every consumer of
+the cache genuinely exercises the page-table indirection — a bug that
+assumes contiguous physical layout fails loudly instead of passing by
+accident.  The paged-KV layout follows the flashinfer/DeepSeek-MLA idiom:
+fixed-capacity pools, append-only growth, gather-by-table reads.
+
+Pool layout is ``[local_heads, n_pages, page_size, head_dim]`` — the
+batch*head-major order :func:`repro.kernels.flash_decode_paged` streams
+and the XLA gather path indexes without transposes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["PagedKVCache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class _PoolKey:
+    layer: int
+    node: int
+
+
+class PagedKVCache:
+    """Paged K/V pools for ``n_layers`` attention layers over ``nodes``
+    devices.
+
+    ``head_split[layer][node]`` is the number of kv heads node ``node``
+    owns in ``layer`` (the planner's head-granular OutC split; replicated
+    layers list the full head count on every node).  ``capacity`` is the
+    maximum token count; storage is ``ceil(capacity / page_size)`` physical
+    pages per pool, allocated up front.
+    """
+
+    def __init__(self, head_split: Sequence[Sequence[int]], head_dim: int,
+                 page_size: int, capacity: int, *, seed: int = 0,
+                 dtype=None):
+        import jax.numpy as jnp
+        if page_size < 1 or capacity < 1:
+            raise ValueError(f"bad page geometry ps={page_size}, "
+                             f"capacity={capacity}")
+        self.head_split: Tuple[Tuple[int, ...], ...] = tuple(
+            tuple(int(h) for h in per_node) for per_node in head_split)
+        self.n_layers = len(self.head_split)
+        self.nodes = len(self.head_split[0]) if self.n_layers else 0
+        self.head_dim = int(head_dim)
+        self.page_size = int(page_size)
+        self.capacity = int(capacity)
+        self.n_pages = -(-capacity // page_size)
+        self.dtype = jnp.float32 if dtype is None else dtype
+        # scrambled logical -> physical assignment (deterministic per seed)
+        rng = np.random.default_rng(seed)
+        self._table = np.asarray(rng.permutation(self.n_pages), np.int32)
+        self._k: List[List] = []
+        self._v: List[List] = []
+        for per_node in self.head_split:
+            if len(per_node) != self.nodes:
+                raise ValueError("ragged head_split across layers")
+            shape = lambda lh: (lh, self.n_pages, self.page_size,
+                                self.head_dim)
+            self._k.append([jnp.zeros(shape(lh), self.dtype)
+                            for lh in per_node])
+            self._v.append([jnp.zeros(shape(lh), self.dtype)
+                            for lh in per_node])
+        self.length = 0
+
+    # ---- geometry ---------------------------------------------------------
+    @property
+    def page_table(self) -> np.ndarray:
+        """Logical→physical page map, ``[n_pages]`` int32."""
+        return self._table
+
+    def slot(self, pos: int) -> Tuple[int, int]:
+        """(physical_page, row) of token position ``pos``."""
+        if not 0 <= pos < self.capacity:
+            raise ValueError(f"position {pos} outside capacity "
+                             f"{self.capacity}")
+        return int(self._table[pos // self.page_size]), pos % self.page_size
+
+    def bytes_per_node(self, node: int) -> int:
+        """Pool bytes resident on ``node`` — proportional to the heads it
+        owns, which is the whole point of head-owner page placement."""
+        elems = sum(split[node] for split in self.head_split) \
+            * self.n_pages * self.page_size * self.head_dim
+        return 2 * elems * np.dtype(np.float32).itemsize  # K and V
+
+    # ---- access -----------------------------------------------------------
+    def append(self, layer: int, node: int, pos: int, k, v) -> None:
+        """Write one token's K/V (``[local_heads, head_dim]``) for
+        ``(layer, node)`` at position ``pos`` (functional jnp update)."""
+        phys, row = self.slot(pos)
+        self._k[layer][node] = self._k[layer][node].at[:, phys, row].set(k)
+        self._v[layer][node] = self._v[layer][node].at[:, phys, row].set(v)
+
+    def store(self, layer: int, node: int, k_pages, v_pages) -> None:
+        """Replace a pool wholesale (executors that batch their updates
+        inside a jitted step write the carried-through arrays back here)."""
+        exp = self._k[layer][node].shape
+        if tuple(k_pages.shape) != exp:
+            raise ValueError(f"pool shape {k_pages.shape} != {exp}")
+        self._k[layer][node] = k_pages
+        self._v[layer][node] = v_pages
+
+    def pages(self, layer: int, node: int):
+        """(k_pages, v_pages) of one pool —
+        ``[local_heads, n_pages, page_size, head_dim]``."""
+        return self._k[layer][node], self._v[layer][node]
+
+    def advance(self, n: int = 1) -> int:
+        """Commit ``n`` appended positions; returns the new length."""
+        if self.length + n > self.capacity:
+            raise ValueError(f"cache overflow: {self.length}+{n} > "
+                             f"capacity {self.capacity}")
+        self.length += n
+        return self.length
+
+    def gather(self, layer: int, node: int):
+        """Contiguous logical-order (K, V) ``[length, local_heads,
+        head_dim]`` — debugging / conformance view (gathers by table)."""
+        kp, vp = self.pages(layer, node)
+        L = self.length
+        pages = self._table[: -(-L // self.page_size)] if L else \
+            self._table[:0]
+        k = kp[:, pages].reshape(kp.shape[0], -1, self.head_dim)[:, :L]
+        v = vp[:, pages].reshape(vp.shape[0], -1, self.head_dim)[:, :L]
+        return k.transpose(1, 0, 2), v.transpose(1, 0, 2)

@@ -862,9 +862,8 @@ def _run_degraded(graph: ModelGraph, weights, x, plan: Plan, nodes: int,
     from repro.runtime import engine as _engine
     _obs_flight.get_flight().record("fallback_local",
                                     graph=graph.name, nodes=nodes)
-    out, local_stats = _engine.run_partitioned(
-        graph, weights, x, plan, nodes, backend=backend,
-        executor="local")
+    out, local_stats = _engine._run_partitioned_local(
+        graph, weights, x, plan, nodes, backend=backend)
     local_stats.retries = stats.retries
     local_stats.timeouts = stats.timeouts
     local_stats.fallbacks = stats.fallbacks + 1

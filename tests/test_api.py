@@ -1,0 +1,138 @@
+"""The consolidated public API surface.
+
+Two contracts: (a) ``repro`` / ``repro.runtime`` export exactly their
+documented ``__all__`` — every name importable, no private leakage — and
+(b) the historical ``run_partitioned`` entry point survives as a working
+shim that warns ``DeprecationWarning`` and returns bit-identical results
+to the :class:`Session` it wraps.
+"""
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+import repro.cluster
+import repro.core
+import repro.runtime
+from repro.core import AnalyticEstimator, ConvT, LayerSpec, Testbed, chain
+from repro.core.dpp import plan_search
+from repro.runtime.engine import init_weights, run_partitioned
+from repro.runtime.session import ExecConfig, Session
+
+
+def _toy():
+    g = chain("toy", [
+        LayerSpec("c0", ConvT.CONV, 16, 16, 3, 8, 3, 1, 1),
+        LayerSpec("pw", ConvT.POINTWISE, 16, 16, 8, 16, 1, 1, 0),
+        LayerSpec("c1", ConvT.CONV, 16, 16, 16, 8, 3, 1, 1),
+    ])
+    key = jax.random.PRNGKey(0)
+    return g, init_weights(g, key), jax.random.normal(key, (16, 16, 3))
+
+
+# ---------------------------------------------------------------------------
+# curated surface
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mod", ["repro", "repro.runtime", "repro.core",
+                                 "repro.cluster"])
+def test_all_names_importable(mod):
+    m = importlib.import_module(mod)
+    assert m.__all__ == sorted(set(m.__all__), key=m.__all__.index)
+    for name in m.__all__:
+        assert not name.startswith("_"), name
+        assert hasattr(m, name), f"{mod}.__all__ lists missing {name!r}"
+
+
+def test_top_level_covers_plan_then_run():
+    """The README quickstart works off `import repro` alone."""
+    for name in ("plan_search", "Testbed", "AnalyticEstimator", "chain",
+                 "Session", "ExecConfig", "init_weights",
+                 "DecodeSession", "TransformerSpec", "plan_decode",
+                 "PagedKVCache", "cluster_plan_search", "homogeneous"):
+        assert name in repro.__all__, name
+
+
+def test_no_private_leakage():
+    """`from repro import *` must not drag in submodules or internals."""
+    ns = {}
+    exec("from repro import *", ns)
+    public = {k for k in ns if not k.startswith("__")}
+    assert public == set(repro.__all__)
+    import types
+    leaked = [k for k, v in ns.items() if isinstance(v, types.ModuleType)]
+    assert not leaked, leaked
+
+
+# ---------------------------------------------------------------------------
+# ExecConfig
+# ---------------------------------------------------------------------------
+
+def test_exec_config_validates():
+    with pytest.raises(ValueError, match="backend"):
+        ExecConfig(backend="cuda")
+    with pytest.raises(ValueError, match="executor"):
+        ExecConfig(executor="ray")
+    with pytest.raises(ValueError, match="fallback"):
+        ExecConfig(fallback="retry")
+    with pytest.raises(ValueError, match="stage_retries"):
+        ExecConfig(stage_retries=-1)
+    with pytest.raises(ValueError, match="stage_timeout_s"):
+        ExecConfig(stage_timeout_s=0.0)
+
+
+def test_exec_config_frozen_hashable_policy():
+    cfg = ExecConfig(backend="pallas", instrument=True)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.backend = "xla"
+    assert cfg == ExecConfig(backend="pallas", instrument=True)
+    assert len({cfg, ExecConfig(backend="pallas", instrument=True),
+                ExecConfig()}) == 2  # hashable policy, usable as cache key
+    # replace() is the supported way to derive variants
+    assert dataclasses.replace(cfg, backend="xla") == \
+        ExecConfig(instrument=True)
+
+
+def test_session_validates_binding():
+    g, ws, _ = _toy()
+    res = plan_search(g, AnalyticEstimator(), Testbed(nodes=4))
+    with pytest.raises(ValueError, match="nodes"):
+        Session(g, ws, res.plan, 0)
+    short = chain("short", list(g.layers[:1]))
+    with pytest.raises(ValueError, match="length"):
+        Session(short, ws, res.plan, 4)
+
+
+# ---------------------------------------------------------------------------
+# run_partitioned shim
+# ---------------------------------------------------------------------------
+
+def test_run_partitioned_warns_and_matches_session():
+    g, ws, x = _toy()
+    res = plan_search(g, AnalyticEstimator(), Testbed(nodes=4))
+    sess_out, _ = Session(g, ws, res.plan, 4).run(x)
+    with pytest.warns(DeprecationWarning, match="Session"):
+        shim_out, stats = run_partitioned(g, ws, x, res.plan, 4)
+    np.testing.assert_array_equal(np.asarray(shim_out),
+                                  np.asarray(sess_out))
+    assert stats is not None
+    # kwargs still thread through (and still get validated)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="backend"):
+            run_partitioned(g, ws, x, res.plan, 4, backend="cuda")
+
+
+def test_session_reuse_across_inputs():
+    g, ws, _ = _toy()
+    res = plan_search(g, AnalyticEstimator(), Testbed(nodes=2))
+    sess = Session(g, ws, res.plan, 2)
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        x = jnp.asarray(rng.normal(size=(16, 16, 3)), jnp.float32)
+        out = sess(x)  # __call__ sugar drops the stats
+        ref, _ = sess.run(x)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

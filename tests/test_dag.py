@@ -13,8 +13,8 @@ from repro.core.estimator import (I_FEATURE_NAMES, S_FEATURE_NAMES,
                                   i_features, s_features)
 from repro.core.exhaustive import enumerate_dag_plans, exhaustive_search
 from repro.core.plan import dag_plan_cost
-from repro.runtime.engine import (init_weights, run_partitioned,
-                                  run_reference)
+from repro.runtime.engine import init_weights, run_reference
+from repro.runtime.session import Session
 
 EST = AnalyticEstimator()
 
@@ -125,7 +125,7 @@ def test_merge_consuming_graph_input_validates_and_runs():
     x = jax.random.normal(key, (8, 8, 3))
     ref = run_reference(g, ws, x)
     for scheme in ALL_SCHEMES:
-        out, _ = run_partitioned(g, ws, x, fixed_plan(g, scheme), 3)
+        out, _ = Session(g, ws, fixed_plan(g, scheme), 3).run(x)
         assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
 
 
@@ -213,7 +213,7 @@ def dag_setup(request):
 @pytest.mark.parametrize("scheme", list(ALL_SCHEMES))
 def test_dag_fixed_schemes_exact(dag_setup, nodes, scheme):
     g, ws, x, ref = dag_setup
-    out, _ = run_partitioned(g, ws, x, fixed_plan(g, scheme), nodes)
+    out, _ = Session(g, ws, fixed_plan(g, scheme), nodes).run(x)
     assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
 
 
@@ -222,7 +222,7 @@ def test_dag_fixed_schemes_exact(dag_setup, nodes, scheme):
 def test_dag_flexpie_plans_exact(dag_setup, nodes, bw):
     g, ws, x, ref = dag_setup
     plan = plan_search(g, EST, Testbed(nodes=nodes, bandwidth_gbps=bw)).plan
-    out, stats = run_partitioned(g, ws, x, plan, nodes)
+    out, stats = Session(g, ws, plan, nodes).run(x)
     assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
     assert stats.sync_points >= len(g.linearize())
 
@@ -234,7 +234,7 @@ def test_dag_random_valid_plans_exact(dag_setup):
     plans = [p for p in enumerate_dag_plans(g) if plan_feasible(g, p, 4)]
     rng.shuffle(plans)
     for plan in plans[:12]:
-        out, _ = run_partitioned(g, ws, x, plan, 4)
+        out, _ = Session(g, ws, plan, 4).run(x)
         assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
 
 
@@ -265,7 +265,7 @@ def test_resnet18_slice_executes_exactly():
     x = jax.random.normal(key, (32, 32, 3))
     ref = run_reference(sub, ws, x)
     plan = plan_search(sub, EST, Testbed(nodes=4, bandwidth_gbps=0.5)).plan
-    out, _ = run_partitioned(sub, ws, x, plan, 4)
+    out, _ = Session(sub, ws, plan, 4).run(x)
     assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
 
 

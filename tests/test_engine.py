@@ -11,8 +11,8 @@ from repro.core.graph import ConvT, LayerSpec
 from repro.core.partition import ALL_SCHEMES, Mode, Scheme
 from repro.core.plan import Plan, fixed_plan, plan_feasible
 from repro.runtime.engine import (clear_segment_cache, init_weights,
-                                  run_partitioned, run_reference,
-                                  segment_cache_info)
+                                  run_reference, segment_cache_info)
+from repro.runtime.session import ExecConfig, Session
 
 EST = AnalyticEstimator()
 
@@ -42,7 +42,7 @@ def toy():
 @pytest.mark.parametrize("scheme", list(ALL_SCHEMES))
 def test_fixed_schemes_exact(toy, nodes, scheme):
     g, ws, x, ref = toy
-    out, _ = run_partitioned(g, ws, x, fixed_plan(g, scheme), nodes)
+    out, _ = Session(g, ws, fixed_plan(g, scheme), nodes).run(x)
     assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
 
 
@@ -51,7 +51,7 @@ def test_fixed_schemes_exact(toy, nodes, scheme):
 def test_flexpie_plans_exact(toy, nodes, bw):
     g, ws, x, ref = toy
     plan = plan_search(g, EST, Testbed(nodes=nodes, bandwidth_gbps=bw)).plan
-    out, stats = run_partitioned(g, ws, x, plan, nodes)
+    out, stats = Session(g, ws, plan, nodes).run(x)
     assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
     assert stats.sync_points == len(plan.segments())
 
@@ -83,7 +83,7 @@ def test_random_feasible_plans_exact(toy):
             continue
         if not plan_feasible(g, plan, 4):
             continue
-        out, _ = run_partitioned(g, ws, x, plan, 4)
+        out, _ = Session(g, ws, plan, 4).run(x)
         assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
         checked += 1
 
@@ -91,10 +91,10 @@ def test_random_feasible_plans_exact(toy):
 def test_comm_accounting_matches_paper_narrative(toy):
     """OutC gathers the whole input (costly, Fig. 1c); NT fusion cuts comm."""
     g, ws, x, ref = toy
-    _, s_outc = run_partitioned(g, ws, x, fixed_plan(g, Scheme.OUTC), 4)
-    _, s_inh = run_partitioned(g, ws, x, fixed_plan(g, Scheme.INH), 4)
+    _, s_outc = Session(g, ws, fixed_plan(g, Scheme.OUTC), 4).run(x)
+    _, s_inh = Session(g, ws, fixed_plan(g, Scheme.INH), 4).run(x)
     plan = plan_search(g, EST, Testbed(nodes=4, bandwidth_gbps=0.5)).plan
-    _, s_flex = run_partitioned(g, ws, x, plan, 4)
+    _, s_flex = Session(g, ws, plan, 4).run(x)
     assert s_outc.bytes_received > 5 * s_inh.bytes_received
     assert s_flex.bytes_received <= s_inh.bytes_received
 
@@ -118,14 +118,16 @@ def test_jit_segment_cache_reuses_repeated_blocks():
 
     clear_segment_cache()
     plan = fixed_plan(g, Scheme.INH)
-    out, _ = run_partitioned(g, ws, x, plan, 4)
+    sess = Session(g, ws, plan, 4)
+    out, _ = sess.run(x)
     info1 = segment_cache_info()
     assert info1.hits > 0          # identical blocks / interior cells share
-    out2, _ = run_partitioned(g, ws, x, plan, 4)
+    out2, _ = sess.run(x)
     info2 = segment_cache_info()
     assert info2.misses == info1.misses   # second run: no new compilations
     assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
-    eager, _ = run_partitioned(g, ws, x, plan, 4, jit_segments=False)
+    eager, _ = Session(g, ws, plan, 4,
+                       ExecConfig(jit_segments=False)).run(x)
     assert float(jnp.max(jnp.abs(out2 - eager))) < 1e-6
 
 
@@ -139,5 +141,5 @@ def test_mobilenet_slice_exact():
     x = jax.random.normal(key, (56, 56, 3))
     ref = run_reference(g, ws, x)
     plan = plan_search(g, EST, Testbed(nodes=4, bandwidth_gbps=0.5)).plan
-    out, _ = run_partitioned(g, ws, x, plan, 4)
+    out, _ = Session(g, ws, plan, 4).run(x)
     assert float(jnp.max(jnp.abs(out - ref))) < 1e-4

@@ -34,8 +34,8 @@ from repro.kernels.conv2d import (UnsupportedGeometry, conv2d_shard,
 from repro.kernels.ops import matmul_tiled
 from repro.kernels.ref import conv2d_shard_ref, matmul_ref
 from repro.runtime.engine import (_apply_record, _apply_record_b,
-                                  init_weights, run_partitioned,
-                                  run_reference)
+                                  init_weights, run_reference)
+from repro.runtime.session import ExecConfig, Session
 
 EST = AnalyticEstimator()
 
@@ -201,8 +201,9 @@ def test_engine_backend_equivalence(name):
     l0 = g.layers[0]
     x = jax.random.normal(key, (l0.in_h, l0.in_w, l0.in_c))
     plan = plan_search(g, EST, Testbed(nodes=4, bandwidth_gbps=0.5)).plan
-    out_x, st_x = run_partitioned(g, ws, x, plan, 4, backend="xla")
-    out_p, st_p = run_partitioned(g, ws, x, plan, 4, backend="pallas")
+    out_x, st_x = Session(g, ws, plan, 4, ExecConfig(backend="xla")).run(x)
+    out_p, st_p = Session(g, ws, plan, 4,
+                          ExecConfig(backend="pallas")).run(x)
     assert _rel_err(out_p, out_x) < 1e-4
     assert st_x == st_p                     # satellite: ExecStats identical
     ref = run_reference(g, ws, x)
@@ -214,8 +215,8 @@ def test_engine_backend_rejects_unknown():
     ws = init_weights(g, jax.random.PRNGKey(0))
     x = jnp.zeros((16, 1, 32))
     with pytest.raises(ValueError, match="backend"):
-        run_partitioned(g, ws, x, fixed_plan(g, Scheme.OUTC), 2,
-                        backend="cuda")
+        Session(g, ws, fixed_plan(g, Scheme.OUTC), 2,
+                ExecConfig(backend="cuda")).run(x)
 
 
 # ---------------------------------------------------------------------------
@@ -300,7 +301,8 @@ if _HAVE_HYPOTHESIS:
         x = jax.random.normal(key, (g.layers[0].in_h, g.layers[0].in_w,
                                     g.layers[0].in_c))
         ref = run_reference(g, ws, x)
-        out, _ = run_partitioned(g, ws, x, plan, nodes, backend="pallas")
+        out, _ = Session(g, ws, plan, nodes,
+                         ExecConfig(backend="pallas")).run(x)
         assert _rel_err(out, ref) < 1e-4
 
     @pytestmark_hyp
@@ -338,5 +340,6 @@ if _HAVE_HYPOTHESIS:
         ws = init_weights(g, key)
         x = jax.random.normal(key, (h, w, cin))
         ref = run_reference(g, ws, x)
-        out, _ = run_partitioned(g, ws, x, plan, nodes, backend="pallas")
+        out, _ = Session(g, ws, plan, nodes,
+                         ExecConfig(backend="pallas")).run(x)
         assert _rel_err(out, ref) < 1e-4

@@ -1,4 +1,4 @@
-"""Mesh executor: multi-device `run_partitioned(..., executor="mesh")`.
+"""Mesh executor: multi-device `Session(..., ExecConfig(executor="mesh"))`.
 
 Two tiers, following the repo's multi-device convention
 (``test_multidevice.py``): the main test process keeps jax at 1 device,
@@ -43,12 +43,17 @@ from repro.core.dpp import plan_search
 from repro.core.partition import Mode, Scheme
 from repro.core.plan import Plan
 from repro.runtime.engine import (EXECUTORS, ExecStats, MeasuredOccupancy,
-                                  StageTime, init_weights,
-                                  run_partitioned)
+                                  StageTime, init_weights)
 from repro.runtime.mesh_exec import validate_stage_decomposition
+from repro.runtime.session import ExecConfig, Session
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 EST = AnalyticEstimator()
+
+
+def run_partitioned(g, w, x, plan, nodes, **cfg):
+    """Session-API positional sugar for this module's config sweeps."""
+    return Session(g, w, plan, nodes, ExecConfig(**cfg)).run(x)
 
 MODEL_TEST_KW = {
     "mobilenet": dict(width=32),
@@ -506,9 +511,13 @@ _PRELUDE = """
     from repro.configs.edge_models import EDGE_MODELS
     from repro.core import AnalyticEstimator, Testbed
     from repro.core.dpp import plan_search
-    from repro.runtime.engine import run_partitioned, init_weights
+    from repro.runtime.engine import init_weights
+    from repro.runtime.session import ExecConfig, Session
     EST = AnalyticEstimator()
     KW = %r
+
+    def run_partitioned(g, w, x, plan, nodes, **cfg):
+        return Session(g, w, plan, nodes, ExecConfig(**cfg)).run(x)
 
     def model_io(name, seed=0):
         g = EDGE_MODELS[name](**KW[name])

@@ -136,7 +136,8 @@ def test_stage_counts_contract_plan_vs_simulator():
 def test_stage_counts_contract_engine():
     import jax
 
-    from repro.runtime.engine import init_weights, run_partitioned
+    from repro.runtime.engine import init_weights
+    from repro.runtime.session import Session
 
     g = small_chain()
     cl = homogeneous(4)
@@ -146,5 +147,5 @@ def test_stage_counts_contract_engine():
     x = jax.random.normal(jax.random.PRNGKey(1),
                           (g.layers[0].in_h, g.layers[0].in_w,
                            g.layers[0].in_c))
-    _, stats = run_partitioned(g, w, x, plan, 4)
+    _, stats = Session(g, w, plan, 4).run(x)
     assert stats.compute_stages == nc

@@ -8,8 +8,8 @@ from repro.core.baselines import all_solutions, performance_scores
 from repro.core.dpp import plan_search
 from repro.core.partition import Mode
 from repro.configs.edge_models import EDGE_MODELS, mobilenet_v1
-from repro.runtime.engine import (init_weights, run_partitioned,
-                                  run_reference)
+from repro.runtime.engine import init_weights, run_reference
+from repro.runtime.session import Session
 
 EST = AnalyticEstimator()
 
@@ -63,7 +63,7 @@ def test_planner_plan_executes_exactly_end_to_end():
     for nodes in (3, 4):
         plan = plan_search(g, EST, Testbed(nodes=nodes,
                                            bandwidth_gbps=0.5)).plan
-        out, stats = run_partitioned(g, ws, x, plan, nodes)
+        out, stats = Session(g, ws, plan, nodes).run(x)
         assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
         assert stats.sync_points >= 1
 
