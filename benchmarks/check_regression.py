@@ -33,6 +33,11 @@ BENCH_mesh.json).
 executors and the pallas backend); timings are advisory for the same
 reason.
 
+``--kind estimator`` gates the learned-estimator quality flags
+(per-preset ``hetero_within_5pct`` / ``hetero_beats_hom`` and the
+calibration ``reduced_2x`` flag) — everything is seeded so these are
+deterministic; the GBDT training timings are advisory.
+
 ``--kind kernels`` additionally hard-fails on a flipped kernel
 ``conformant`` flag or a pallas/xla engine-equivalence (``agree`` /
 ``stats_equal``) flag — kernel drift is a correctness bug, not a perf
@@ -301,7 +306,52 @@ def check_decode(current: dict, baseline: dict, max_ratio: float,
     return bad
 
 
+def check_estimator(current: dict, baseline: dict, max_ratio: float,
+                    min_us: float) -> List[str]:
+    """Learned-estimator gate: the seeded quality flags are hard — on
+    every baseline preset the hetero-trained GBDT must stay within 5% of
+    the analytic oracle's plan cost (``hetero_within_5pct``) and
+    strictly beat the homogeneous-trained GBDT (``hetero_beats_hom``),
+    and online calibration must keep cutting the predicted-period error
+    at least 2x (``reduced_2x``).  Training timings are advisory (see
+    ``noise_note``): a slowdown beyond ``--max-ratio`` prints a
+    ``timing_note`` on stderr but never fails the job — trace
+    generation + GBDT fit wall time on shared CI runners is noise."""
+    bad: List[str] = []
+    for preset, rec in baseline.get("presets", {}).items():
+        cur = current.get("presets", {}).get(preset)
+        if cur is None:
+            bad.append(f"estimator/{preset}: preset missing from current")
+            continue
+        if not cur.get("hetero_within_5pct", False):
+            bad.append(f"estimator/{preset}: hetero GBDT plan cost "
+                       f"{cur.get('hetero_oracle_ratio')}x oracle — "
+                       f"no longer within 5%")
+        if not cur.get("hetero_beats_hom", False):
+            bad.append(f"estimator/{preset}: hetero GBDT "
+                       f"({cur.get('hetero_oracle_ratio')}x oracle) no "
+                       f"longer beats the homogeneous-trained GBDT "
+                       f"({cur.get('hom_oracle_ratio')}x)")
+    base_cal = baseline.get("calibration", {})
+    cal = current.get("calibration")
+    if cal is None:
+        if base_cal:
+            bad.append("estimator: calibration record missing from current")
+    elif not cal.get("reduced_2x", False):
+        bad.append(f"estimator: calibration no longer cuts the period "
+                   f"error 2x (reduction {cal.get('reduction')})")
+    for field in ("train_hetero_us", "train_hom_us"):
+        base_us = float(baseline.get(field, 0.0))
+        cur_us = float(current.get(field, 0.0))
+        if base_us >= min_us and cur_us > max_ratio * base_us:
+            print(f"# timing_note estimator/{field}: {cur_us:.0f}us > "
+                  f"{max_ratio:g}x baseline {base_us:.0f}us — advisory, "
+                  f"see noise_note", file=sys.stderr)
+    return bad
+
+
 _CHECKERS = {"search": check_search, "sweep": check_sweep,
+             "estimator": check_estimator,
              "kernels": check_kernels, "mesh": check_mesh,
              "churn": check_churn, "decode": check_decode}
 

@@ -1,19 +1,48 @@
-"""CE quality — GBDT i-/s-Estimator held-out accuracy and the end-to-end
-plan-quality gap of data-driven FCO vs the analytic oracle (§3.2)."""
+"""CE quality — GBDT i-/s-Estimator held-out accuracy, the end-to-end
+plan-quality gap of data-driven FCO vs the analytic oracle (§3.2), and
+the heterogeneity acceptance record (BENCH_estimator.json).
+
+The JSON record carries the hard CI gates for the hetero-aware learned
+estimator (``check_regression.py --kind estimator``):
+
+* per preset (``mixed_fast_slow``, ``stepped``), the mean
+  plan-cost/oracle ratio of the hetero-trained GBDT over the
+  model x node-count evaluation grid must stay within 5% of the analytic
+  oracle (``hetero_within_5pct``) and strictly below the
+  homogeneous-trained GBDT's ratio (``hetero_beats_hom``);
+* online calibration must cut the predicted-period error at least 2x on
+  the seeded skewed-occupancy scenario (``reduced_2x``).
+
+Timings (``train_us`` etc.) are advisory.  Everything is seeded, so the
+record is deterministic for a given budget: the per-push CI job runs the
+smoke budget against the committed smoke baseline; nightly runs
+``--full`` (3x traces, 2x trees) against the same flags.
+"""
 from __future__ import annotations
+
+import json
+import sys
 
 import numpy as np
 
 from repro.core import AnalyticEstimator, Testbed
 from repro.core.dpp import plan_search
 from repro.core.plan import plan_cost
-from repro.configs.edge_models import mobilenet_v1
-from repro.sim import TraceConfig, generate_i_traces, train_estimators
+from repro.configs.edge_models import mobilenet_v1, resnet18
+from repro.sim import (TraceConfig, generate_i_traces, hetero_trace_config,
+                       train_estimators)
 
-from .common import emit, time_call
+from .common import emit, json_arg, time_call
+
+#: training budgets: (n_samples, trees, depth, hetero_fraction)
+SMOKE_BUDGET = (20_000, 60, 7, 0.7)
+FULL_BUDGET = (60_000, 120, 7, 0.7)
+EVAL_NODES = (4, 5, 6)
+PRESETS = ("mixed_fast_slow", "stepped")
 
 
 def run(n_samples: int = 12_000, trees: int = 60) -> None:
+    """Homogeneous CE quality (the historical stdout benchmark)."""
     cfg = TraceConfig(n_samples=n_samples, seed=0)
     us, est = time_call(lambda: train_estimators(
         cfg, gbdt_kwargs=dict(n_estimators=trees, max_depth=7)), repeats=1)
@@ -37,5 +66,118 @@ def run(n_samples: int = 12_000, trees: int = 60) -> None:
          f"gap={(true_cost / opt - 1) * 100:.1f}%")
 
 
+def _preset_quality(het, hom, graphs) -> dict:
+    """Mean plan-cost/oracle ratios of both estimators per preset."""
+    from repro.cluster import (CLUSTER_PRESETS, ClusterAnalyticEstimator,
+                               ClusterGBDTEstimator, cluster_plan_search)
+    out = {}
+    for preset in PRESETS:
+        het_r, hom_r, cells = [], [], {}
+        for gname, g in graphs:
+            for n in EVAL_NODES:
+                cl = CLUSTER_PRESETS[preset](n)
+                tb = cl.compat_testbed()
+                oracle = cluster_plan_search(g, cl)
+                ae = ClusterAnalyticEstimator(cl)
+                ce = ClusterGBDTEstimator(het, cl)
+                h = plan_cost(g, cluster_plan_search(
+                    g, cl, estimator=ce).plan, ae, tb) / oracle.cost
+                m = plan_cost(g, plan_search(g, hom, tb).plan, ae,
+                              tb) / oracle.cost
+                het_r.append(h)
+                hom_r.append(m)
+                cells[f"{gname}/n{n}"] = {"hetero_ratio": h,
+                                          "hom_ratio": m}
+        het_mean = float(np.mean(het_r))
+        hom_mean = float(np.mean(hom_r))
+        out[preset] = {
+            "hetero_oracle_ratio": het_mean,
+            "hom_oracle_ratio": hom_mean,
+            "hetero_within_5pct": bool(het_mean <= 1.05),
+            "hetero_beats_hom": bool(het_mean < hom_mean),
+            "cells": cells,
+        }
+    return out
+
+
+def _calibration_record() -> dict:
+    """Seeded skewed-occupancy scenario: two devices run 1.7x slower and
+    links 1.3x slower than the physics says; a handful of folded
+    measurements must cut the predicted-period error >= 2x."""
+    from repro.cluster import (OnlineCalibrator, cluster_plan_search,
+                               mixed_fast_slow)
+    cl = mixed_fast_slow(4)
+    g = mobilenet_v1(96)
+    plan = cluster_plan_search(g, cl).plan
+    cal = OnlineCalibrator(cl, decay=0.6)
+    dev, link = cal.predicted_occupancy(g, plan)
+    skew = np.where(np.arange(cl.n) == int(np.argmax(dev)), 1.7, 1.0)
+    true_dev = float(np.max(dev * skew))
+    true_link = float(np.max(link)) * 1.3
+    true_period = max(true_dev, true_link)
+
+    class _Meas:
+        dev_occupancy_s = true_dev
+        link_occupancy_s = true_link
+        period_s = true_period
+        failures = 0
+
+    errs = [abs(cal.predict_period(g, plan) - true_period) / true_period]
+    for _ in range(6):
+        cal.observe(g, plan, _Meas())
+        errs.append(abs(cal.predict_period(g, plan) - true_period)
+                    / true_period)
+    reduction = errs[0] / max(errs[-1], 1e-15)
+    return {
+        "initial_rel_err": errs[0],
+        "final_rel_err": errs[-1],
+        "error_trajectory": errs,
+        "reduction": reduction,
+        "reduced_2x": bool(reduction >= 2.0),
+    }
+
+
+def quality_record(full: bool = False) -> dict:
+    n_samples, trees, depth, fraction = FULL_BUDGET if full else SMOKE_BUDGET
+    kw = dict(n_estimators=trees, max_depth=depth)
+    us_het, het = time_call(lambda: train_estimators(
+        hetero_trace_config(n_samples=n_samples, seed=0,
+                            hetero_fraction=fraction),
+        gbdt_kwargs=kw), repeats=1)
+    us_hom, hom = time_call(lambda: train_estimators(
+        TraceConfig(n_samples=n_samples, seed=0), gbdt_kwargs=kw),
+        repeats=1)
+    graphs = [("mobilenet", mobilenet_v1(96)), ("resnet18", resnet18(96))]
+    presets = _preset_quality(het, hom, graphs)
+    cal = _calibration_record()
+    for preset, rec in presets.items():
+        emit(f"ce/hetero-{preset}", us_het,
+             f"hetero_ratio={rec['hetero_oracle_ratio']:.4f};"
+             f"hom_ratio={rec['hom_oracle_ratio']:.4f};"
+             f"beats={rec['hetero_beats_hom']};"
+             f"within5={rec['hetero_within_5pct']}")
+    emit("ce/calibration", 0.0,
+         f"err {cal['initial_rel_err']:.3f}->{cal['final_rel_err']:.3f};"
+         f"reduction={cal['reduction']:.1f}x")
+    return {
+        "budget": {"n_samples": n_samples, "trees": trees, "depth": depth,
+                   "hetero_fraction": fraction,
+                   "mode": "full" if full else "smoke"},
+        "presets": presets,
+        "calibration": cal,
+        "train_hetero_us": us_het,
+        "train_hom_us": us_hom,
+        "noise_note": "train_*_us timings are advisory on shared CI "
+                      "runners; the quality flags are the gate",
+    }
+
+
 if __name__ == "__main__":
-    run()
+    json_path = json_arg(sys.argv[1:], default="BENCH_estimator.json")
+    if json_path is not None:
+        rec = quality_record(full="--full" in sys.argv[1:])
+        with open(json_path, "w") as f:
+            json.dump(rec, f, indent=1, sort_keys=True)
+        print(f"# wrote {json_path}")
+    else:
+        run()

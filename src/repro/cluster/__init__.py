@@ -32,7 +32,9 @@ from .elastic import (CapacityError, DeviceRegistry, DeviceState,
                       ElasticPlanner, Member, MembershipError, MigrationCost,
                       ReplanDecision, migration_cost_s, plan_device_bytes,
                       plan_memory_ok)
-from .estimator import ClusterAnalyticEstimator
+from .calibrate import (CalibrationSample, OnlineCalibrator,
+                        fold_queueing_delay)
+from .estimator import ClusterAnalyticEstimator, ClusterGBDTEstimator
 from .refine import (RefineOscillationError, RefineResult, RefineStep,
                      refine_with_simulator)
 from .serving import (DecodeServingReport, ServingPoint, choose_batch,
@@ -51,15 +53,20 @@ def cluster_plan_search(graph: ModelGraph, cluster: ClusterSpec,
                         max_segment: int = 32,
                         allow_fusion: bool = True,
                         objective: Objective = Objective.LATENCY,
-                        latency_bound_s: Optional[float] = None
-                        ) -> SearchResult:
+                        latency_bound_s: Optional[float] = None,
+                        estimator=None) -> SearchResult:
     """DPP over a cluster: batched tables throughout (the cluster estimator
     implements the full batched protocol, so heterogeneous layouts never
     fall back to scalar calls).  ``weighted=False`` plans with even shard
     fractions on the same silicon — the homogeneous-assumption baseline.
     ``objective`` selects the serving objective (single-shot latency,
-    pipelined throughput, or p99-bounded throughput)."""
-    est = ClusterAnalyticEstimator(cluster, weighted=weighted)
+    pipelined throughput, or p99-bounded throughput).  ``estimator``
+    overrides the analytic cluster estimator — pass a
+    :class:`ClusterGBDTEstimator` bound to this cluster to plan on
+    learned costs (it must be bound to the same cluster; the testbed
+    check enforces the projection)."""
+    est = estimator if estimator is not None else \
+        ClusterAnalyticEstimator(cluster, weighted=weighted)
     return plan_search(graph, est, cluster.compat_testbed(), schemes=schemes,
                        max_segment=max_segment, allow_fusion=allow_fusion,
                        objective=objective, latency_bound_s=latency_bound_s)
@@ -71,13 +78,17 @@ def cluster_pipeline_frontier(graph: ModelGraph, cluster: ClusterSpec,
                               max_segment: int = 32,
                               allow_fusion: bool = True,
                               ub_cost: Optional[float] = None,
-                              prune_ub: bool = True) -> PlanFrontier:
+                              prune_ub: bool = True,
+                              estimator=None) -> PlanFrontier:
     """The (compute, sync) Pareto frontier of all plans on this cluster —
     one build serves every objective selection and the simulator-in-the-
     loop refinement.  Pass ``prune_ub=False`` when the frontier will be
     re-weighted (``refine_with_simulator``), ``ub_cost`` to reuse an
-    already-computed latency optimum (see ``core.pipeline_frontier``)."""
-    est = ClusterAnalyticEstimator(cluster, weighted=weighted)
+    already-computed latency optimum (see ``core.pipeline_frontier``),
+    ``estimator`` to build the frontier on learned costs
+    (:class:`ClusterGBDTEstimator`) instead of the analytic model."""
+    est = estimator if estimator is not None else \
+        ClusterAnalyticEstimator(cluster, weighted=weighted)
     return pipeline_frontier(graph, est, cluster.compat_testbed(),
                              schemes=schemes, max_segment=max_segment,
                              allow_fusion=allow_fusion, ub_cost=ub_cost,
@@ -85,16 +96,19 @@ def cluster_pipeline_frontier(graph: ModelGraph, cluster: ClusterSpec,
 
 
 __all__ = [
-    "CHURN_SCENARIOS", "CLUSTER_PRESETS", "CapacityError",
-    "ChurnEvent", "ChurnRunResult", "ChurnScenario",
-    "ClusterAnalyticEstimator", "ClusterSpec", "DeviceRegistry",
+    "CHURN_SCENARIOS", "CLUSTER_PRESETS", "CalibrationSample",
+    "CapacityError", "ChurnEvent", "ChurnRunResult", "ChurnScenario",
+    "ClusterAnalyticEstimator", "ClusterGBDTEstimator", "ClusterSpec",
+    "DeviceRegistry",
     "DeviceSpec", "DeviceState", "ElasticPlanner", "LinkSpec", "Member",
-    "MembershipError", "MigrationCost", "Objective", "PlanFrontier",
+    "MembershipError", "MigrationCost", "Objective", "OnlineCalibrator",
+    "PlanFrontier",
     "RefineOscillationError", "RefineResult", "RefineStep",
     "ReplanDecision", "STRATEGIES", "ServingPoint", "SimReport", "Stage",
     "asym_uplink", "build_stages", "choose_batch",
     "cluster_pipeline_frontier", "cluster_plan_search",
-    "compare_strategies", "export_sim_trace", "homogeneous",
+    "compare_strategies", "export_sim_trace", "fold_queueing_delay",
+    "homogeneous",
     "max_goodput", "migration_cost_s", "mixed_fast_slow",
     "DecodeServingReport", "plan_decode_serving", "serve_decode",
     "plan_device_bytes", "plan_memory_ok", "random_scenario",

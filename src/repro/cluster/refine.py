@@ -92,7 +92,9 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
                           occupancy_fn: Optional[Callable[[Plan], object]]
                           = None,
                           rel_tol: Optional[float] = None,
-                          on_oscillation: str = "best") -> RefineResult:
+                          on_oscillation: str = "best",
+                          calibrator: Optional[object] = None
+                          ) -> RefineResult:
     """Throughput plan with simulator-calibrated resource weights.
 
     Returns the simulator-best plan over all iterates (never worse than
@@ -122,6 +124,13 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
     :class:`RefineOscillationError` instead of silently returning the
     simulator-best iterate.
 
+    ``calibrator`` (a ``cluster.calibrate.OnlineCalibrator``) carries
+    corrections *across* refinement calls: the loop warm-starts
+    ``(beta, alpha)`` from ``calibrator.axis_scales()`` instead of
+    ``(1, 1)`` and folds every *trusted* iterate back via
+    ``calibrator.observe`` (untrusted samples never move the calibrator,
+    matching the axis-weight rule below).
+
     Fault awareness: an ``occupancy_fn`` result with a nonzero
     ``failures`` attribute (``ExecStats.to_occupancy()`` sets it from the
     run's retry/timeout/fallback counters) is an *untrusted sample* — the
@@ -140,6 +149,8 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
         allow_fusion, prune_ub=False)
 
     beta = alpha = 1.0
+    if calibrator is not None:
+        beta, alpha = calibrator.axis_scales()
     seen: set = set()
     steps: List[RefineStep] = []
     best: Optional[Tuple[float, Plan, SimReport]] = None
@@ -173,8 +184,10 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
         plan = fr.plan(idx)
         rep: Optional[SimReport] = None
         failed = False
+        measured: object = None
         if occupancy_fn is not None:
             occ = occupancy_fn(plan)
+            measured = occ
             period = float(occ.period_s)
             rps = 1.0 / period if period > 0.0 else 0.0
             dev_occ = float(occ.dev_occupancy_s)
@@ -184,7 +197,15 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
             rep = simulate(graph, plan, cluster, n_requests=n_requests,
                            weighted=weighted)
             rps = rep.throughput_rps
-            period = 1.0 / rps
+            # a degenerate report (zero or infinite throughput — e.g. an
+            # all-zero-duration stage DAG) has no meaningful period; treat
+            # it as an untrusted sample rather than dividing by it (the
+            # historical ``1.0 / rps`` raised ZeroDivisionError on 0 and
+            # poisoned the rel_tol check with inf)
+            finite = 0.0 < rps < float("inf")
+            period = 1.0 / rps if finite else 0.0
+            failed = not finite
+            measured = rep
             served = rep.n_requests
             dev_occ = max(rep.device_busy_s) / served
             link_occ = (max(rep.link_busy_s) / served
@@ -213,6 +234,8 @@ def refine_with_simulator(graph: ModelGraph, cluster: ClusterSpec,
             last_failed = True
             continue      # keep previous axis weights
         last_failed = False
+        if calibrator is not None:
+            calibrator.observe(graph, plan, measured, weighted=weighted)
         if rel_tol is not None and len(steps) >= 2:
             prev = steps[-2].sim_period_s
             if abs(period - prev) <= rel_tol * max(prev, 1e-30):

@@ -52,7 +52,10 @@ def serve_point(graph: ModelGraph, plan: Plan, cluster: ClusterSpec,
     (the fill time of an evenly-paced arrival stream); per-request latency
     adds the fill wait of the *first* request of the batch — the
     conservative (worst-member) accounting, which is what a p99 bound
-    should see.  Capacity comes from a closed-loop run of the same batched
+    should see.  The p99 itself is conservative too: ``SimReport``
+    reports the ``method="higher"`` order statistic, an observed latency
+    rather than an interpolation below it.  Capacity comes from a
+    closed-loop run of the same batched
     stage DAG; an unstable point (arrivals outrun capacity) is infeasible
     regardless of the simulated window.
     """
@@ -226,7 +229,9 @@ def serve_decode(spec, cluster: ClusterSpec, *, prompt_len: int,
         prefill_s=prefill_s, decode_step_s=decode_s,
         tokens_per_s=tokens / t,
         p50_latency_s=float(np.percentile(latencies, 50)),
-        p99_latency_s=float(np.percentile(latencies, 99)),
+        # conservative tail: an observed latency, never an interpolation
+        # below the worst request (matches SimReport.p99_latency_s)
+        p99_latency_s=float(np.percentile(latencies, 99, method="higher")),
         mean_batch=float(np.mean(occupancy)) if occupancy else 0.0,
         makespan_s=t, n_requests=n_requests,
         prefill_schemes=tuple(s.name for s, _ in pre.plan.steps),

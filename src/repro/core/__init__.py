@@ -6,8 +6,12 @@ from .partition import (ALL_SCHEMES, Mode, Scheme, hetero_shard_work,
 from .cost import (Testbed, Topology, hetero_compute_time_batch_s,
                    hetero_compute_time_s, hetero_device_times_s,
                    sync_bytes_messages)
-from .estimator import (AnalyticEstimator, BatchedCostEstimator,
-                        CostEstimator, GBDTEstimator)
+from .estimator import (HETERO_FEATURE_NAMES, I_FEATURE_NAMES,
+                        I_FEATURE_NAMES_HETERO, N_HETERO_FEATURES,
+                        S_FEATURE_NAMES, S_FEATURE_NAMES_HETERO,
+                        AnalyticEstimator, BatchedCostEstimator,
+                        CostEstimator, GBDTEstimator, hetero_summary,
+                        testbed_summary)
 from .cost_tables import (ChainTables, CostTableBuilder, PrefetchedEstimator,
                           build_chain_tables)
 from .plan import (Plan, PipelineCost, dag_plan_cost, fixed_plan, plan_cost,
@@ -26,7 +30,10 @@ __all__ = [
     "hetero_device_times_s", "hetero_shard_work", "sync_bytes_messages",
     "weighted_split_sizes",
     "AnalyticEstimator", "BatchedCostEstimator", "CostEstimator",
-    "GBDTEstimator", "ChainTables", "CostTableBuilder",
+    "GBDTEstimator", "HETERO_FEATURE_NAMES", "I_FEATURE_NAMES",
+    "I_FEATURE_NAMES_HETERO", "N_HETERO_FEATURES", "S_FEATURE_NAMES",
+    "S_FEATURE_NAMES_HETERO", "hetero_summary", "testbed_summary",
+    "ChainTables", "CostTableBuilder",
     "PrefetchedEstimator", "build_chain_tables", "Plan", "PipelineCost",
     "dag_plan_cost", "fixed_plan", "plan_cost", "plan_feasible",
     "plan_pipeline_cost", "plan_stage_counts", "steps_segments",

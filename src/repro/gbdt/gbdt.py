@@ -30,6 +30,7 @@ class GBDTRegressor:
         self.subsample = subsample
         self.seed = seed
         self.base_: float = 0.0
+        self.n_features_: Optional[int] = None
         self.trees_: List[RegressionTree] = []
         self._forest: Optional[Tuple[np.ndarray, ...]] = None
 
@@ -55,6 +56,7 @@ class GBDTRegressor:
         x = np.asarray(x, dtype=np.float64)
         y = np.asarray(y, dtype=np.float64)
         rng = np.random.default_rng(self.seed)
+        self.n_features_ = int(x.shape[1])
         edges = self._make_bins(x)
         binned = self._bin(x, edges)
         self.base_ = float(y.mean())
@@ -157,7 +159,9 @@ class GBDTRegressor:
     def save(self, path: str) -> None:
         flat = {"base": np.array([self.base_]),
                 "lr": np.array([self.learning_rate]),
-                "n_trees": np.array([len(self.trees_)])}
+                "n_trees": np.array([len(self.trees_)]),
+                "n_features": np.array([-1 if self.n_features_ is None
+                                        else self.n_features_])}
         for i, tr in enumerate(self.trees_):
             arr = np.array([[n.feature, n.threshold, n.left, n.right, n.value,
                              1.0 if n.is_leaf else 0.0] for n in tr.nodes])
@@ -170,6 +174,9 @@ class GBDTRegressor:
         obj = cls(n_estimators=int(data["n_trees"][0]),
                   learning_rate=float(data["lr"][0]))
         obj.base_ = float(data["base"][0])
+        if "n_features" in data:        # absent in pre-width checkpoints
+            nf = int(data["n_features"][0])
+            obj.n_features_ = None if nf < 0 else nf
         obj.trees_ = []
         from .tree import _Node
         for i in range(int(data["n_trees"][0])):

@@ -1,6 +1,6 @@
 """Edge-testbed simulator: the stand-in for the paper's SRIO DSP cluster."""
-from .trace import (TraceConfig, generate_i_traces, generate_s_traces,
-                    train_estimators)
+from .trace import (HETERO_PRESETS, TraceConfig, generate_i_traces,
+                    generate_s_traces, hetero_trace_config, train_estimators)
 
-__all__ = ["TraceConfig", "generate_i_traces", "generate_s_traces",
-           "train_estimators"]
+__all__ = ["HETERO_PRESETS", "TraceConfig", "generate_i_traces",
+           "generate_s_traces", "hetero_trace_config", "train_estimators"]

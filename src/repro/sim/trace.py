@@ -5,20 +5,35 @@ drawn from the analytic testbed physics (``core/cost.py``) with multiplicative
 log-normal measurement noise — the same role, no hardware.  The GBDT
 estimators are then trained on (features -> log seconds) pairs and plugged
 into DPP, giving the full data-driven FCO loop end to end.
+
+Heterogeneous traces: a config with ``cluster_presets`` set additionally
+samples ``repro.cluster`` presets (``mixed_fast_slow``, ``stepped``,
+``asym_uplink``); those rows carry the per-cluster capability summary
+columns (``core.estimator.hetero_summary``) after the exact homogeneous
+prefix and are labeled by the heterogeneous batched physics
+(``hetero_compute_time_batch_s`` straggler maxes; sync against the
+bottleneck-projected compat testbed).  The default (empty-preset) config
+is **draw-for-draw identical** to the historical homogeneous stream —
+same RNG consumption, same 17/20-column matrices, same labels.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.cost import (Testbed, Topology, compute_time_batch_s,
-                             sync_time_batch_s)
-from repro.core.estimator import (GBDTEstimator, i_features, s_features)
+                             hetero_compute_time_batch_s, sync_time_batch_s)
+from repro.core.estimator import (GBDTEstimator, hetero_summary, i_features,
+                                  s_features, testbed_summary)
 from repro.core.graph import ConvT, LayerSpec
 from repro.core.partition import Scheme
 from repro.gbdt import GBDTRegressor
+
+#: the heterogeneous presets a hetero trace config samples by default
+HETERO_PRESETS: Tuple[str, ...] = ("mixed_fast_slow", "stepped",
+                                   "asym_uplink")
 
 
 @dataclasses.dataclass
@@ -30,6 +45,23 @@ class TraceConfig:
     bw_choices: Tuple[float, ...] = (0.5, 1.0, 5.0)
     topo_choices: Tuple[Topology, ...] = (Topology.RING, Topology.PS,
                                           Topology.MESH)
+    #: ``repro.cluster.CLUSTER_PRESETS`` names to sample heterogeneous
+    #: rows from.  Empty (the default) keeps the historical homogeneous
+    #: stream and the 17/20-column layout; non-empty widens every row by
+    #: the capability-summary columns (homogeneous rows carry the uniform
+    #: summary) and labels preset rows with the hetero physics.
+    cluster_presets: Tuple[str, ...] = ()
+    #: fraction of samples drawn on a sampled preset (only consulted when
+    #: ``cluster_presets`` is non-empty)
+    hetero_fraction: float = 0.5
+
+
+def hetero_trace_config(**overrides) -> TraceConfig:
+    """A :class:`TraceConfig` sampling all heterogeneous presets (the
+    config the hetero-trained planner estimator is built from)."""
+    kw = dict(cluster_presets=HETERO_PRESETS)
+    kw.update(overrides)
+    return TraceConfig(**kw)
 
 
 def _random_layer(rng: np.random.Generator) -> LayerSpec:
@@ -72,45 +104,127 @@ def _random_testbed(rng: np.random.Generator, cfg: TraceConfig) -> Testbed:
                    topology=Topology(int(rng.choice(cfg.topo_choices))))
 
 
+def _sample_cluster(rng: np.random.Generator, cfg: TraceConfig,
+                    cache: Dict[tuple, object]) -> tuple:
+    """Draw one heterogeneous cluster (preset name x node count); clusters
+    are memoized so label batching can group rows by cluster key."""
+    from repro.cluster.spec import CLUSTER_PRESETS   # lazy: keep the
+    # homogeneous import path free of the cluster subsystem
+    name = cfg.cluster_presets[int(rng.integers(0,
+                                                len(cfg.cluster_presets)))]
+    nodes = int(rng.choice(cfg.node_choices))
+    key = (name, nodes)
+    if key not in cache:
+        cache[key] = CLUSTER_PRESETS[name](nodes)
+    return key
+
+
+def _cluster_summary(cluster) -> List[float]:
+    return hetero_summary(cluster.capability_weights,
+                          [link.bandwidth_gbps for link in cluster.links],
+                          cluster.max_latency_us)
+
+
+def _hetero_i_labels(X: np.ndarray, factors: np.ndarray,
+                     keys: List[Optional[tuple]],
+                     clusters: Dict[tuple, object]) -> np.ndarray:
+    """Batched ground-truth compute times: homogeneous rows through one
+    ``compute_time_batch_s`` call, each preset group through one
+    ``hetero_compute_time_batch_s`` call (straggler max under the
+    cluster's capability weights — exactly what
+    ``ClusterAnalyticEstimator.i_cost_batch`` computes)."""
+    t = np.empty(len(X), np.float64)
+    key_arr = np.asarray(_index(keys))
+    hom = key_arr < 0
+    if hom.any():
+        t[hom] = compute_time_batch_s(X[hom], Testbed(), factors[hom])
+    for gi, (key, cl) in enumerate(clusters.items()):
+        m = key_arr == gi
+        if not m.any():
+            continue
+        t[m] = hetero_compute_time_batch_s(
+            X[m], cl.compat_testbed(),
+            np.asarray(cl.speeds_gflops), np.asarray(cl.dev_derates),
+            np.asarray(cl.capability_weights), factors[m])
+    return t
+
+
+def _index(keys: List[Optional[tuple]]) -> List[int]:
+    """Group index per row: position of the row's cluster key in
+    first-seen order (-1 entries are handled by the caller's mask)."""
+    order: Dict[tuple, int] = {}
+    out = []
+    for k in keys:
+        if k is None:
+            out.append(-1)
+        else:
+            out.append(order.setdefault(k, len(order)))
+    return out
+
+
 def generate_i_traces(cfg: TraceConfig) -> Tuple[np.ndarray, np.ndarray]:
     """i-Estimator traces: features -> log(compute seconds).
 
     Sampling stays scalar (it drives the RNG stream, kept draw-for-draw
-    identical to the historical loop), but the tens of thousands of
-    ground-truth times come from **one** ``compute_time_batch_s`` call.
-    A spatial scheme is required for a nonzero halo, so every sampled
-    configuration is valid by construction.
+    identical to the historical loop under the default config), but the
+    tens of thousands of ground-truth times come from batched physics
+    calls — one per cluster group.  A spatial scheme is required for a
+    nonzero halo, so every sampled configuration is valid by construction.
     """
     rng = np.random.default_rng(cfg.seed)
     xs: List[List[float]] = []
     factors: List[float] = []
     noise: List[float] = []
+    keys: List[Optional[tuple]] = []
+    clusters: Dict[tuple, object] = {}
     while len(xs) < cfg.n_samples:
         layer = _random_layer(rng)
-        tb = _random_testbed(rng, cfg)
+        if cfg.cluster_presets and rng.random() < cfg.hetero_fraction:
+            key = _sample_cluster(rng, cfg, clusters)
+            cl = clusters[key]
+            tb = cl.compat_testbed()
+            summary = _cluster_summary(cl)
+        else:
+            key = None
+            tb = _random_testbed(rng, cfg)
+            summary = testbed_summary(tb) if cfg.cluster_presets else None
         scheme = Scheme(int(rng.integers(0, 4)))
         halo = 0
         if scheme.spatial and rng.random() < 0.4:
             halo = int(rng.integers(1, 5))
         noise.append(float(np.exp(rng.normal(0.0, cfg.noise_sigma))))
-        xs.append(i_features(layer, scheme, tb, halo))
+        xs.append(i_features(layer, scheme, tb, halo, hetero=summary))
         factors.append(layer.extra_flop_factor)
+        keys.append(key)
     X = np.asarray(xs)
-    t = compute_time_batch_s(X, Testbed(), np.asarray(factors)) \
+    t = _hetero_i_labels(X, np.asarray(factors), keys, clusters) \
         * np.asarray(noise)
     return X, np.log(np.maximum(t, 1e-9))
 
 
 def generate_s_traces(cfg: TraceConfig) -> Tuple[np.ndarray, np.ndarray]:
     """s-Estimator traces: features -> log(sync seconds).  Same structure
-    as :func:`generate_i_traces`: scalar sampling, one batched
-    ``sync_time_batch_s`` evaluation."""
+    as :func:`generate_i_traces`: scalar sampling, batched
+    ``sync_time_batch_s`` evaluation per cluster group (heterogeneous
+    rows are priced against the bottleneck-projected compat testbed —
+    bandwidth/topology travel in the feature columns, the projected link
+    latency in ``tb``)."""
     rng = np.random.default_rng(cfg.seed + 1)
     xs: List[List[float]] = []
     noise: List[float] = []
+    keys: List[Optional[tuple]] = []
+    clusters: Dict[tuple, object] = {}
     while len(xs) < cfg.n_samples:
         layer = _random_layer(rng)
-        tb = _random_testbed(rng, cfg)
+        if cfg.cluster_presets and rng.random() < cfg.hetero_fraction:
+            key = _sample_cluster(rng, cfg, clusters)
+            cl = clusters[key]
+            tb = cl.compat_testbed()
+            summary = _cluster_summary(cl)
+        else:
+            key = None
+            tb = _random_testbed(rng, cfg)
+            summary = testbed_summary(tb) if cfg.cluster_presets else None
         src = Scheme(int(rng.integers(0, 4)))
         if rng.random() < 0.1:
             nxt, dst = None, None
@@ -118,9 +232,19 @@ def generate_s_traces(cfg: TraceConfig) -> Tuple[np.ndarray, np.ndarray]:
             nxt = _random_layer(rng)
             dst = Scheme(int(rng.integers(0, 4)))
         noise.append(float(np.exp(rng.normal(0.0, cfg.noise_sigma))))
-        xs.append(s_features(layer, nxt, src, dst, tb))
+        xs.append(s_features(layer, nxt, src, dst, tb, hetero=summary))
+        keys.append(key)
     X = np.asarray(xs)
-    t = sync_time_batch_s(X, Testbed()) * np.asarray(noise)
+    t = np.empty(len(X), np.float64)
+    key_arr = np.asarray(_index(keys))
+    hom = key_arr < 0
+    if hom.any():
+        t[hom] = sync_time_batch_s(X[hom], Testbed())
+    for gi, (key, cl) in enumerate(clusters.items()):
+        m = key_arr == gi
+        if m.any():
+            t[m] = sync_time_batch_s(X[m], cl.compat_testbed())
+    t *= np.asarray(noise)
     return X, np.log(np.maximum(t, 1e-9))
 
 

@@ -4,9 +4,9 @@ import copy
 import json
 import os
 
-from benchmarks.check_regression import (check_churn, check_kernels,
-                                         check_mesh, check_search,
-                                         check_sweep, main)
+from benchmarks.check_regression import (check_churn, check_estimator,
+                                         check_kernels, check_mesh,
+                                         check_search, check_sweep, main)
 
 _BASE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                      "baselines")
@@ -64,11 +64,66 @@ MESH = {
 }
 
 
+ESTIMATOR = {
+    "budget": {"n_samples": 20000, "trees": 60, "mode": "smoke"},
+    "presets": {
+        "mixed_fast_slow": {
+            "hetero_oracle_ratio": 1.015, "hom_oracle_ratio": 1.184,
+            "hetero_within_5pct": True, "hetero_beats_hom": True,
+            "cells": {"resnet18/n6": {"hetero_ratio": 1.02,
+                                      "hom_ratio": 1.55}},
+        },
+        "stepped": {
+            "hetero_oracle_ratio": 1.023, "hom_oracle_ratio": 1.274,
+            "hetero_within_5pct": True, "hetero_beats_hom": True,
+            "cells": {},
+        },
+    },
+    "calibration": {"initial_rel_err": 0.4, "final_rel_err": 0.01,
+                    "reduction": 40.0, "reduced_2x": True},
+    "train_hetero_us": 3e7,
+    "train_hom_us": 2e7,
+    "noise_note": "advisory",
+}
+
+
 def test_clean_record_passes():
     assert check_search(SEARCH, SEARCH, 2.0, 5000.0) == []
     assert check_sweep(SWEEP, SWEEP, 2.0, 5000.0) == []
     assert check_kernels(KERNELS, KERNELS, 2.0, 5000.0) == []
     assert check_mesh(MESH, MESH, 2.0, 5000.0) == []
+    assert check_estimator(ESTIMATOR, ESTIMATOR, 2.0, 5000.0) == []
+
+
+def test_estimator_quality_flips_fail():
+    """The seeded estimator-quality flags are hard gates; a training-time
+    blowup alone is advisory and never fails."""
+    for preset, flag, needle in (
+            ("mixed_fast_slow", "hetero_within_5pct", "within 5%"),
+            ("stepped", "hetero_beats_hom", "homogeneous-trained")):
+        cur = copy.deepcopy(ESTIMATOR)
+        cur["presets"][preset][flag] = False
+        bad = check_estimator(cur, ESTIMATOR, 2.0, 5000.0)
+        assert len(bad) == 1 and needle in bad[0], (flag, bad)
+    cur = copy.deepcopy(ESTIMATOR)
+    cur["calibration"]["reduced_2x"] = False
+    bad = check_estimator(cur, ESTIMATOR, 2.0, 5000.0)
+    assert len(bad) == 1 and "calibration" in bad[0]
+    # 100x training slowdown: advisory only
+    cur = copy.deepcopy(ESTIMATOR)
+    cur["train_hetero_us"] = 3e9
+    assert check_estimator(cur, ESTIMATOR, 2.0, 5000.0) == []
+
+
+def test_estimator_missing_sections_fail():
+    cur = copy.deepcopy(ESTIMATOR)
+    del cur["presets"]["stepped"]
+    assert any("missing" in b
+               for b in check_estimator(cur, ESTIMATOR, 2.0, 5000.0))
+    cur2 = copy.deepcopy(ESTIMATOR)
+    del cur2["calibration"]
+    assert any("calibration record missing" in b
+               for b in check_estimator(cur2, ESTIMATOR, 2.0, 5000.0))
 
 
 def test_mesh_flag_flips_fail():
@@ -219,7 +274,7 @@ def test_cli_end_to_end(tmp_path):
 def test_committed_baselines_pass_against_themselves():
     checkers = {"search": check_search, "sweep": check_sweep,
                 "kernels": check_kernels, "mesh": check_mesh,
-                "churn": check_churn}
+                "churn": check_churn, "estimator": check_estimator}
     for kind, checker in checkers.items():
         path = os.path.join(_BASE, f"BENCH_{kind}.json")
         with open(path) as f:
